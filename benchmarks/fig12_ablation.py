@@ -1,0 +1,46 @@
+"""Fig. 12 — ablation ladder, vanilla engine -> full Nitsum.
+
+The paper's ladder (14B/8xH100/70rps analogue, mapped to our frame):
+  1 sglang (static TP, SLO-agnostic)          -> baseline
+  2 sglang-pd (static disaggregation)         -> collapses (stage mismatch)
+  3 + SLO-aware batching rule, best static TP -> small gain
+  4 + per-tier partition (split)              -> small gain
+  5 + Nitsum scheduler (feasibility/spill)    -> bigger gain
+  6 + dynamic TP with naive switching         -> collapses (switch cost)
+  7 full Nitsum (fast switching)              -> best
+"""
+from __future__ import annotations
+
+from benchmarks.common import N_CHIPS, Row, perf_model, save_json, tiers, timed
+from repro.serving.simulator import NitsumPolicy, Simulator, run_system
+from repro.traces.servegen import servegen_shifting
+
+LADDER = [
+    ("1_sglang", "sglang", {}),
+    ("2_sglang_pd", "sglang-pd", {}),
+    ("3_slo_static", "sglang-slo", {}),  # +SLO batch rule, best static TP
+    ("4_split_tier", "split", {}),
+    ("5_nitsum_sched_static", "nitsum", dict(dynamic_tp=False)),
+    ("6_dynamic_naive_switch", "nitsum-slowswitch", {}),
+    ("7_full_nitsum", "nitsum", {}),
+]
+
+
+def run(quick: bool = False):
+    perf = perf_model()
+    ts = tiers(perf)
+    # shifting tier mix (paper §2.3): the goodput-optimal config changes
+    # during the trace, so dynamic TP actually engages
+    wl = servegen_shifting(horizon_s=120.0 if quick else 360.0, rps_scale=2.0)
+
+    def work():
+        out = {}
+        for label, system, kw in LADDER:
+            sim, meter = run_system(system, perf, ts, N_CHIPS, wl, **kw)
+            out[label] = meter.goodput(wl.horizon_s)
+        return out
+
+    res, us = timed(work)
+    save_json("fig12_ablation", res)
+    rows = [Row(f"fig12.{k}", us, f"{v:.2f}req/s") for k, v in res.items()]
+    return rows

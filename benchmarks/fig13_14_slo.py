@@ -1,0 +1,50 @@
+"""Fig. 13 — SLO strictness sweep (scale factor 0.75x–3x);
+Fig. 14 — three SLO tiers (adds a relaxed background-ish tier)."""
+from __future__ import annotations
+
+from benchmarks.common import N_CHIPS, Row, perf_model, save_json, tiers, timed
+from repro.core.goodput import SLOTier
+from repro.serving.simulator import run_system
+from repro.traces.servegen import servegen_two_tier, servegen_workload
+from repro.traces.workload import make_workload, merge_workloads
+
+
+def run(quick: bool = False):
+    perf = perf_model()
+    base = tiers(perf)
+    horizon = 90.0 if quick else 240.0
+    # contended regime (static baselines saturated) — the paper's operating
+    # point where tier-vs-TP matching matters
+    wl = servegen_two_tier(horizon_s=horizon, rps_scale=2.2)
+
+    factors = [0.75, 1.0, 2.0] if quick else [0.75, 1.0, 1.5, 2.0, 3.0]
+    fig13 = {}
+    for f in factors:
+        ts = [t.scaled(f) for t in base]
+        fig13[f] = {}
+        for system in ("nitsum", "sglang"):
+            _, meter = run_system(system, perf, ts, N_CHIPS, wl)
+            fig13[f][system] = meter.goodput(wl.horizon_s)
+    save_json("fig13_slo_scale", fig13)
+
+    # Fig 14: third, much more relaxed tier
+    third = make_workload("bg", "loose", 4.0, 600, 60, horizon, seed=7)
+    wl3 = merge_workloads("servegen-3tier", wl, third)
+    ts3 = list(base) + [SLOTier("loose", base[0].ttft_ms * 3, base[1].tpot_ms * 3)]
+    fig14 = {}
+    for system in ("nitsum", "sglang", "split"):
+        _, meter = run_system(system, perf, ts3, N_CHIPS, wl3)
+        fig14[system] = {
+            "total": meter.goodput(wl3.horizon_s),
+            **meter.per_tier_goodput(wl3.horizon_s),
+        }
+    save_json("fig14_three_tier", fig14)
+
+    rows = []
+    gains = {f: fig13[f]["nitsum"] / max(fig13[f]["sglang"], 1e-9) for f in factors}
+    mid = sorted(factors)[len(factors) // 2]
+    rows.append(Row("fig13.gain_at_moderate_slo", 0, f"{gains[mid]:.2f}x"))
+    rows.append(Row("fig13.gain_at_loose_slo", 0, f"{gains[max(factors)]:.2f}x"))
+    rows.append(Row("fig14.nitsum_3tier_total", 0, f"{fig14['nitsum']['total']:.2f}req/s"))
+    rows.append(Row("fig14.split_3tier_total", 0, f"{fig14['split']['total']:.2f}req/s"))
+    return rows

@@ -1,0 +1,31 @@
+"""Fig. 15 — goodput scalability with cluster size (4 -> 64 chips)."""
+from __future__ import annotations
+
+from benchmarks.common import Row, perf_model, save_json, tiers, timed
+from repro.serving.simulator import run_system
+from repro.traces.servegen import servegen_two_tier
+
+
+def run(quick: bool = False):
+    perf = perf_model()
+    ts = tiers(perf)
+    horizon = 60.0 if quick else 180.0
+    sizes = [8, 16, 32] if quick else [4, 8, 16, 32, 64]
+    out = {}
+    for n in sizes:
+        # load proportional to pool size so each point probes saturation
+        wl = servegen_two_tier(horizon_s=horizon, rps_scale=n / 8.0)
+        out[n] = {}
+        for system in ("nitsum", "sglang", "split"):
+            _, meter = run_system(system, perf, ts, n, wl)
+            out[n][system] = meter.goodput(wl.horizon_s)
+    save_json("fig15_scalability", out)
+    # efficiency from the first non-degenerate pool (at 4 chips the model
+    # barely fits and everything is overloaded)
+    lo, hi = sizes[1] if len(sizes) > 3 else sizes[0], sizes[-1]
+    scaling = (out[hi]["nitsum"] / max(out[lo]["nitsum"], 1e-9)) / (hi / lo)
+    return [
+        Row("fig15.nitsum_scaling_efficiency", 0, f"{scaling:.2f} (1.0=linear)"),
+        Row("fig15.nitsum_at_max_chips", 0, f"{out[hi]['nitsum']:.2f}req/s"),
+        Row("fig15.sglang_at_max_chips", 0, f"{out[hi]['sglang']:.2f}req/s"),
+    ]

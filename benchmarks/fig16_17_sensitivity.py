@@ -1,0 +1,42 @@
+"""Fig. 16/17 — sensitivity to reconfiguration interval and monitoring
+window. The paper finds a broad optimum near 0.5–1 s and near-flat window
+sensitivity (within ~6%)."""
+from __future__ import annotations
+
+from benchmarks.common import N_CHIPS, Row, perf_model, save_json, tiers, timed
+from repro.serving.simulator import NitsumPolicy, Simulator
+from repro.traces.servegen import servegen_two_tier
+
+
+def run(quick: bool = False):
+    perf = perf_model()
+    ts = tiers(perf)
+    horizon = 90.0 if quick else 240.0
+    wl = servegen_two_tier(horizon_s=horizon, rps_scale=1.8)
+
+    intervals = [0.25, 1.0, 4.0] if quick else [0.1, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0]
+    fig16 = {}
+    for w in intervals:
+        policy = NitsumPolicy(perf, ts, candidate_tps=(2, 4, 8))
+        sim = Simulator(perf, ts, N_CHIPS, policy, window_s=w)
+        meter = sim.run(wl)
+        fig16[w] = meter.goodput(wl.horizon_s)
+    save_json("fig16_reconfig_interval", fig16)
+
+    windows = [5.0, 10.0, 30.0] if quick else [2.0, 5.0, 10.0, 20.0, 30.0, 60.0]
+    fig17 = {}
+    for mw in windows:
+        policy = NitsumPolicy(perf, ts, candidate_tps=(2, 4, 8))
+        sim = Simulator(perf, ts, N_CHIPS, policy, monitor_window_s=mw)
+        meter = sim.run(wl)
+        fig17[mw] = meter.goodput(wl.horizon_s)
+    save_json("fig17_monitor_window", fig17)
+
+    best16 = max(fig16, key=fig16.get)
+    spread17 = (max(fig17.values()) - min(fig17.values())) / max(fig17.values())
+    return [
+        Row("fig16.best_interval_s", 0, f"{best16}s ({fig16[best16]:.2f}req/s)"),
+        Row("fig16.range", 0,
+            f"{min(fig16.values()):.2f}-{max(fig16.values()):.2f}req/s"),
+        Row("fig17.window_sensitivity_spread", 0, f"{spread17*100:.1f}%"),
+    ]

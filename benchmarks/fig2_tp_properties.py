@@ -1,0 +1,52 @@
+"""Fig. 2 — Properties of tensor parallelism on the target chip.
+
+TTFT vs TP (per prompt length), per-chip-normalized decode throughput vs TP
+(per batch size), and the communication-cost share — the paper's core
+observation that TP moves both TTFT and TPOT, with a batch-dependent
+crossover. GPU L2 effects map to HBM/VMEM residency on TPU (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from benchmarks.common import CANDIDATE_TPS, Row, perf_model, save_json, timed
+
+
+def run(quick: bool = False):
+    perf = perf_model()
+    prompt_lens = [256, 1024, 4096] if quick else [128, 256, 1024, 4096, 16384]
+    batches = [1, 8, 64] if quick else [1, 4, 8, 32, 64, 128, 256]
+    out = {"ttft_ms": {}, "norm_decode_tps": {}, "comm_share": {}}
+
+    def work():
+        for L in prompt_lens:
+            out["ttft_ms"][L] = {tp: perf.ttft_ms(L, tp) for tp in CANDIDATE_TPS}
+        for b in batches:
+            out["norm_decode_tps"][b] = {}
+            out["comm_share"][b] = {}
+            for tp in CANDIDATE_TPS:
+                t = perf.decode_step_time_s(b, 2048, tp)
+                out["norm_decode_tps"][b][tp] = b / t / tp
+                comm = perf.allreduce_time(
+                    b * perf.cfg.d_model * 2 / tp, tp
+                ) * 2 * perf.cfg.num_layers
+                out["comm_share"][b][tp] = comm / t
+        return out
+
+    res, us = timed(work)
+    # absolute TPOT (the SLO-binding quantity): falls near-linearly with TP
+    tpot = {b: {tp: perf.tpot_ms(b, 2048, tp) for tp in CANDIDATE_TPS} for b in batches}
+    res["tpot_ms"] = tpot
+    save_json("fig2_tp_properties", res)
+    ttft_drop = res["ttft_ms"][prompt_lens[-1]][1] / res["ttft_ms"][prompt_lens[-1]][8]
+    tpot_drop = tpot[batches[0]][1] / tpot[batches[0]][8]
+    b_small, b_big = batches[0], batches[-1]
+    small_gain = res["norm_decode_tps"][b_small][8] / res["norm_decode_tps"][b_small][1]
+    big_gain = res["norm_decode_tps"][b_big][8] / res["norm_decode_tps"][b_big][1]
+    # hardware-adaptation note (DESIGN.md §2): on v5e the per-chip-normalized
+    # benefit is flat (no 40MB L2 analogue at these model sizes); the control
+    # surface works through absolute TTFT/TPOT, which both drop with TP.
+    return [
+        Row("fig2.ttft_tp1_over_tp8", us, f"{ttft_drop:.2f}x"),
+        Row("fig2.tpot_bs1_tp1_over_tp8", us, f"{tpot_drop:.2f}x"),
+        Row("fig2.norm_decode_tp8_vs_tp1_bs1", us, f"{small_gain:.2f}x"),
+        Row("fig2.norm_decode_tp8_vs_tp1_bs_large", us, f"{big_gain:.2f}x"),
+    ]

@@ -1,0 +1,67 @@
+"""§Roofline — collate the dry-run artifacts into the per-(arch x shape)
+roofline table: three terms, dominant bottleneck, MODEL_FLOPS/HLO ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import DRYRUN_DIR, Row, save_json
+from repro.configs import SHAPES, get_config
+
+
+def model_flops_for(arch: str, shape_name: str, chips: int) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens / chips
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens / chips
+    return 2.0 * n_active * shape.global_batch / chips  # decode: one token
+
+
+def load_table(mesh: str = "16x16", rules: str = "default"):
+    rows = {}
+    for path in glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}__{rules}.json")):
+        with open(path) as f:
+            d = json.load(f)
+        key = (d["arch"], d["shape"])
+        r = d["roofline"]
+        mf = model_flops_for(d["arch"], d["shape"], d["chips"])
+        rows[key] = {
+            "compute_s": r["compute_s"],
+            "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "dominant": r["dominant"],
+            "model_flops_per_chip": mf,
+            "useful_flops_ratio": mf / max(r["flops_per_device"], 1e-9),
+            "peak_bytes_gb": d["memory"]["peak_bytes_estimate"] / 1e9,
+            "compile_s": d.get("compile_s"),
+        }
+    return rows
+
+
+def run(quick: bool = False):
+    rows = load_table()
+    save_json("roofline_table", {f"{a}|{s}": v for (a, s), v in rows.items()})
+    out = []
+    if not rows:
+        return [Row("roofline.cells", 0, "0 (dry-run not yet executed)")]
+    n_dom = {}
+    worst = None
+    for (a, s), v in rows.items():
+        n_dom[v["dominant"]] = n_dom.get(v["dominant"], 0) + 1
+        frac = v["compute_s"] / max(
+            v["compute_s"], v["memory_s"], v["collective_s"]
+        )
+        if worst is None or frac < worst[1]:
+            worst = (f"{a}|{s}", frac)
+    out.append(Row("roofline.cells", 0, str(len(rows))))
+    out.append(Row("roofline.dominant_counts", 0,
+                   ";".join(f"{k}:{v}" for k, v in sorted(n_dom.items()))))
+    out.append(Row("roofline.worst_compute_fraction", 0,
+                   f"{worst[0]}={worst[1]:.3f}"))
+    return out

@@ -1,0 +1,58 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig9,...]
+
+Prints ``name,us_per_call,derived`` CSV rows; detailed payloads land in
+benchmarks/results/*.json (consumed by EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "fig2_tp_properties",
+    "fig3_static_vs_dynamic",
+    "fig7_kv_migration",
+    "fig9_goodput",
+    "fig12_ablation",
+    "fig13_14_slo",
+    "fig15_scalability",
+    "fig16_17_sensitivity",
+    "sched_throughput",
+    "roofline_table",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    mods = args.only.split(",") if args.only else MODULES
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name in mods:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            rows = mod.run(quick=args.quick)
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            print(f"{name},0,FAILED:{e!r}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+            continue
+        wall = (time.time() - t0) * 1e6
+        for r in rows:
+            if r.us_per_call == 0.0:
+                r.us_per_call = wall / max(len(rows), 1)
+            print(r.csv(), flush=True)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

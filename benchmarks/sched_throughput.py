@@ -1,0 +1,56 @@
+"""§4.2.3 — control-plane scalability: global-scheduler dispatch throughput
+(the paper: 16.1K req/s over 128 replicas, Rust) and planner latency at 128
+chips / 4 request groups (paper: 2.49 ms)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, perf_model, save_json, tiers
+from repro.core.goodput import SLOTier
+from repro.core.planner import Planner, PlannerInputs, TierDemand
+from repro.serving.global_scheduler import GlobalScheduler, GroupHandle
+
+
+def run(quick: bool = False):
+    perf = perf_model()
+    # 128 replica groups
+    groups = [
+        GroupHandle(g, "strict" if g % 2 else "relaxed", "mixed", 2, max_rps=50.0)
+        for g in range(128)
+    ]
+    gs = GlobalScheduler(groups)
+    n = 10_000 if quick else 50_000
+    t0 = time.perf_counter()
+    for i in range(n):
+        g, feas = gs.dispatch("strict" if i % 2 else "relaxed", 0.001)
+        if i % 16 == 0:
+            gs.complete(g.gid, 0.001)
+    dt = time.perf_counter() - t0
+    dispatch_rps = n / dt
+
+    # planner latency: 128 chips, 4 request groups, TP {1,2,4,8}
+    ts4 = [
+        SLOTier("t1", 200, 10), SLOTier("t2", 300, 20),
+        SLOTier("t3", 500, 40), SLOTier("t4", 1000, 80),
+    ]
+    pl = Planner(perf, ts4, candidate_tps=(1, 2, 4, 8))
+    demands = {
+        f"t{i+1}": TierDemand(rps=50.0 * (i + 1), prompt_len=1024, output_len=128)
+        for i in range(4)
+    }
+    times = []
+    for _ in range(20 if quick else 100):
+        plan = pl.plan(PlannerInputs(demands, 128))
+        times.append(plan.planning_ms)
+    save_json("sched_throughput", {
+        "dispatch_rps": dispatch_rps,
+        "planning_ms_mean": float(np.mean(times)),
+        "planning_ms_p99": float(np.percentile(times, 99)),
+    })
+    return [
+        Row("sched.dispatch_throughput", dt / n * 1e6, f"{dispatch_rps/1e3:.1f}K req/s"),
+        Row("sched.planning_ms_128chips_4groups", float(np.mean(times)) * 1e3,
+            f"{np.mean(times):.2f}ms"),
+    ]

@@ -1,0 +1,39 @@
+"""Trace-replay comparison: Nitsum vs the paper's baselines on ServeGen.
+
+    PYTHONPATH=src python examples/plan_trace.py [--horizon 120] [--scale 2.0]
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.profiles.perf_model import PerfModel
+from repro.profiles.slo import derive_tiers
+from repro.serving.simulator import run_system
+from repro.traces.servegen import servegen_two_tier
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--horizon", type=float, default=120.0)
+    ap.add_argument("--scale", type=float, default=2.0)
+    ap.add_argument("--chips", type=int, default=16)
+    args = ap.parse_args()
+
+    perf = PerfModel(get_config("llama3-8b"))
+    tiers = derive_tiers(perf, prompt_len=900, ctx_len=1000)
+    print("derived SLOs (paper methodology: strict=bs1, relaxed=bs128):")
+    for t in tiers:
+        print(f"  {t.name}: TTFT {t.ttft_ms:.0f}ms TPOT {t.tpot_ms:.1f}ms")
+
+    wl = servegen_two_tier(horizon_s=args.horizon, rps_scale=args.scale)
+    print(f"workload: {wl.stats()}")
+    print(f"{'system':14s} {'goodput':>8s}  {'strict':>7s} {'relaxed':>8s} {'reconfigs':>9s}")
+    for system in ("nitsum", "sglang", "sglang-pd", "split", "llumnix", "chiron"):
+        sim, meter = run_system(system, perf, tiers, args.chips, wl)
+        g = meter.goodput(wl.horizon_s)
+        per = meter.per_tier_goodput(wl.horizon_s)
+        print(f"{system:14s} {g:8.2f}  {per.get('strict', 0):7.2f} "
+              f"{per.get('relaxed', 0):8.2f} {sim.reconfig_count:9d}")
+
+
+if __name__ == "__main__":
+    main()

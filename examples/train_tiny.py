@@ -1,0 +1,55 @@
+"""Train a reduced-config model for a few hundred steps with checkpointing.
+
+    PYTHONPATH=src python examples/train_tiny.py [--arch mamba2-2.7b] [--steps 200]
+"""
+import argparse
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models.model import model_param_defs
+from repro.models.params import count_params, init_params
+from repro.parallel.sharding import DEFAULT_RULES, make_exec_config
+from repro.training.data import SyntheticDataset
+from repro.training.loop import LoopConfig, train_loop
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import TrainStepConfig, init_opt_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/train_tiny_ckpt")
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    ec = make_exec_config(cfg, 1)
+    defs = model_param_defs(cfg, ec)
+    params = init_params(defs, jax.random.PRNGKey(0), jnp.float32)
+    print(f"{cfg.name}: {count_params(defs)/1e6:.2f}M params")
+    tcfg = TrainStepConfig(opt=AdamWConfig(lr=3e-3, warmup_steps=20),
+                           seq_chunk=32, block_q=32, block_k=32)
+    step_fn, _ = make_train_step(cfg, ec, DEFAULT_RULES, None, tcfg)
+    opt = init_opt_state(params, tcfg)
+    ds = SyntheticDataset(cfg, batch=8, seq=64)
+    shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+    loop = LoopConfig(total_steps=args.steps, ckpt_every=50, ckpt_dir=args.ckpt_dir)
+
+    def log(step, m):
+        if step % 20 == 0:
+            print(f"step {step:4d} loss {float(m['loss']):.4f}")
+
+    state = train_loop(step_fn, params, opt, ds, loop, on_step=log)
+    first = np.mean(state.losses[:10])
+    last = np.mean(state.losses[-10:])
+    print(f"loss {first:.3f} -> {last:.3f} over {state.step} steps "
+          f"(mean step {np.mean(state.step_times[3:]):.3f}s)")
+    assert last < first, "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Pallas TPU kernels for the performance-critical serving hot-spots.
+
+Each kernel directory contains:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (auto interpret=True off-TPU)
+  ref.py    — pure-jnp oracle used by the test sweeps
+
+Kernels:
+  tp_shard_matmul — matmul that *selects* its TP weight shard at execution
+      time via BlockSpec index-map offsets (the paper's zero-overhead TP
+      weight switching, §3.2.1, as TPU block addressing).
+  kv_gather — paged-KV aggregation/scatter for TP migration (§3.2.2); the
+      Pallas grid pipeline is the paper's double buffer.
+  paged_attention — flash-decode over paged KV with scalar-prefetched block
+      tables (the decode hot-spot the TP tradeoff acts on).
+"""
+from repro.kernels.tp_shard_matmul.ops import tp_shard_matmul
+from repro.kernels.kv_gather.ops import kv_gather, kv_scatter
+from repro.kernels.paged_attention.ops import paged_decode_attention
+
+__all__ = [
+    "tp_shard_matmul",
+    "kv_gather",
+    "kv_scatter",
+    "paged_decode_attention",
+]

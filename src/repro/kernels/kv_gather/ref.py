@@ -1,0 +1,10 @@
+"""Pure-jnp oracles for paged-KV gather/scatter."""
+import jax.numpy as jnp
+
+
+def kv_gather_ref(pool, page_ids):
+    return jnp.take(pool, jnp.asarray(page_ids, jnp.int32), axis=0)
+
+
+def kv_scatter_ref(pool, staged, page_ids):
+    return pool.at[jnp.asarray(page_ids, jnp.int32)].set(staged)

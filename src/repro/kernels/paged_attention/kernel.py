@@ -1,0 +1,120 @@
+"""Flash-decode over paged KV (single new token per sequence).
+
+Grid: (batch, pages). The block table is scalar-prefetched so the KV
+BlockSpec index map addresses each sequence's pages directly in HBM — the
+kernel never materializes a contiguous KV view (PagedAttention, adapted to
+TPU block addressing). Online softmax state (m, l, acc) lives in VMEM
+scratch and persists across the page axis of the grid; Pallas's pipeline
+overlaps the next page's DMA with the current page's compute.
+
+GQA layout: q (1, KV, G, hd) per sequence; K/V pages (page, KV, hd).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    tables_ref,  # (B, n_pages) scalar prefetch
+    lens_ref,  # (B,) scalar prefetch
+    q_ref,  # (1, KV, G, hd)
+    k_ref,  # (1, page, KV, hd)
+    v_ref,  # (1, page, KV, hd)
+    o_ref,  # (1, KV, G, hd)
+    m_ref,  # VMEM (KV, G)
+    l_ref,  # VMEM (KV, G)
+    acc_ref,  # VMEM (KV, G, hd)
+    *,
+    n_pages: int,
+    page_size: int,
+    scale: float,
+    softcap,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (KV, G, hd)
+    k = k_ref[0].astype(jnp.float32)  # (page, KV, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jnp.einsum("kgh,pkh->kgp", q, k) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = j * page_size + jax.lax.iota(jnp.int32, page_size)
+    valid = pos < lens_ref[b]
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    m_ref[...] = m_new
+    l_ref[...] = l_ref[...] * corr + p.sum(-1)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum("kgp,pkh->kgh", p, v)
+
+    @pl.when(j == n_pages - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[..., None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_p(
+    q, k_pages, v_pages, block_tables, seq_lens, *, softcap, interpret: bool
+):
+    """q: (B,KV,G,hd); pages: (P, page, KV, hd); tables: (B, n_pages);
+    seq_lens: (B,). Returns (B,KV,G,hd)."""
+    B, KV, G, hd = q.shape
+    page_size = k_pages.shape[1]
+    n_pages = block_tables.shape[1]
+    scale = hd**-0.5
+
+    kv_spec = pl.BlockSpec(
+        (1, page_size, KV, hd), lambda b, j, tables, lens: (tables[b, j], 0, 0, 0)
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _decode_kernel,
+            n_pages=n_pages,
+            page_size=page_size,
+            scale=scale,
+            softcap=softcap,
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, n_pages),
+            in_specs=[
+                pl.BlockSpec((1, KV, G, hd), lambda b, j, tables, lens: (b, 0, 0, 0)),
+                kv_spec,
+                kv_spec,
+            ],
+            out_specs=pl.BlockSpec(
+                (1, KV, G, hd), lambda b, j, tables, lens: (b, 0, 0, 0)
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((KV, G), jnp.float32),
+                pltpu.VMEM((KV, G), jnp.float32),
+                pltpu.VMEM((KV, G, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(
+        jnp.asarray(block_tables, jnp.int32),
+        jnp.asarray(seq_lens, jnp.int32),
+        q,
+        k_pages,
+        v_pages,
+    )

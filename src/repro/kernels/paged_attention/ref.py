@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: densify pages, run masked softmax attention."""
+import jax
+import jax.numpy as jnp
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, seq_lens, *, softcap=None):
+    B, KV, G, hd = q.shape
+    page = k_pages.shape[1]
+    n_pages = block_tables.shape[1]
+    S = n_pages * page
+
+    k = jnp.take(k_pages, block_tables, axis=0).reshape(B, S, KV, hd)
+    v = jnp.take(v_pages, block_tables, axis=0).reshape(B, S, KV, hd)
+    s = jnp.einsum(
+        "bkgh,bskh->bkgs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (hd**-0.5)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = jnp.arange(S)[None] < seq_lens[:, None]  # (B,S)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,83 @@
+"""TP-shard-selecting matmul (Nitsum §3.2.1, TPU-native form).
+
+The weight operand is the device's *storage* shard (possibly covering
+several execution shards); the execution-time shard is selected by offsetting
+the weight BlockSpec index map with a scalar-prefetched block offset. No
+weight bytes are copied or moved on a TP switch — shard "selection" is pure
+HBM block addressing, the TPU analogue of the paper's pointer-offset kernels.
+
+col mode:  y = x @ w[:, off : off + n_out]        (column-parallel layer)
+row mode:  y = x @ w[off : off + k, :]            (row-parallel layer)
+
+Accumulation runs in an f32 VMEM scratch across the K grid axis; MXU-aligned
+block shapes are chosen by ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(off_ref, x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def tp_shard_matmul_p(
+    x,
+    w_store,
+    offset,
+    *,
+    mode: str,
+    n_out: int,
+    bm: int,
+    bn: int,
+    bk: int,
+    interpret: bool,
+):
+    """x: (M, K); w_store: (K_store, N_store); offset: scalar int32 array.
+
+    col: K_store == K, selects n_out columns at `offset`.
+    row: N_store == n_out, selects K rows at `offset` (K = x.shape[1]).
+    """
+    m, kdim = x.shape
+    nk = kdim // bk
+    grid = (m // bm, n_out // bn, nk)
+
+    if mode == "col":
+        w_spec = pl.BlockSpec((bk, bn), lambda i, j, k, off: (k, j + off[0] // bn))
+    elif mode == "row":
+        w_spec = pl.BlockSpec((bk, bn), lambda i, j, k, off: (k + off[0] // bk, j))
+    else:
+        raise ValueError(mode)
+
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, nk=nk),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, k, off: (i, k)),
+                w_spec,
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, off: (i, j)),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, n_out), x.dtype),
+        interpret=interpret,
+    )(jnp.asarray(offset, jnp.int32).reshape(1), x, w_store)

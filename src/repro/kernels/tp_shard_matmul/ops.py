@@ -1,0 +1,49 @@
+"""Public jit'd wrapper: block-shape selection + CPU interpret fallback."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.tp_shard_matmul.kernel import tp_shard_matmul_p
+
+
+def _pick_block(dim: int, candidates=(512, 256, 128, 64, 32, 16, 8)) -> int:
+    for c in candidates:
+        if dim % c == 0:
+            return c
+    return dim
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "n_out", "bm", "bn", "bk", "interpret")
+)
+def _call(x, w_store, offset, *, mode, n_out, bm, bn, bk, interpret):
+    return tp_shard_matmul_p(
+        x, w_store, offset, mode=mode, n_out=n_out, bm=bm, bn=bn, bk=bk,
+        interpret=interpret,
+    )
+
+
+def tp_shard_matmul(x, w_store, offset, *, n_out: int, mode: str = "col"):
+    """y = x @ (execution-time-selected shard of w_store).
+
+    x: (M, K). col mode: w_store (K, N_store), selects n_out cols at offset.
+    row mode: w_store (K_store, n_out), selects K rows at offset.
+    offset must be a multiple of the chosen weight block (guaranteed when
+    shard sizes divide by the block; ops picks blocks that divide n_out/K).
+    """
+    m, k = x.shape
+    bm = _pick_block(m)
+    bn = _pick_block(n_out)
+    bk = _pick_block(k)
+    # MXU alignment: prefer >=128 blocks when the dims allow
+    return _call(
+        x, w_store, jnp.asarray(offset, jnp.int32),
+        mode=mode, n_out=n_out, bm=bm, bn=bn, bk=bk, interpret=not _on_tpu(),
+    )

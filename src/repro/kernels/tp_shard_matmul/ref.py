@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the TP-shard-selecting matmul."""
+import jax
+import jax.numpy as jnp
+
+
+def tp_shard_matmul_ref(x, w_store, offset, *, mode: str, n_out: int):
+    offset = jnp.asarray(offset, jnp.int32)
+    if mode == "col":
+        w = jax.lax.dynamic_slice_in_dim(w_store, offset, n_out, axis=1)
+    elif mode == "row":
+        w = jax.lax.dynamic_slice_in_dim(w_store, offset, x.shape[1], axis=0)
+    else:
+        raise ValueError(mode)
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,193 @@
+"""Dry-run cell builders: (architecture x input shape x mesh) -> lowered step.
+
+Everything here is ShapeDtypeStruct-based — no arrays are ever allocated.
+``input_specs()`` provides stand-ins for every model input; frontends are
+stubs per the assignment: musicgen receives precomputed frame embeddings
+(B, S, d_model), chameleon receives VQ token ids inside the shared vocab.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, shape_applicable
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.model import (
+    forward,
+    logits_for,
+    loss_fn,
+    model_param_defs,
+    init_cache_defs,
+)
+from repro.models.params import is_def, param_shape_structs, tree_map_defs
+from repro.parallel.sharding import (
+    ShardingRules,
+    make_exec_config,
+    pspec_for,
+    rules_for,
+    sharding_for,
+)
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import TrainStepConfig, make_train_step
+
+
+def _struct(shape, dtype, mesh, pspec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, pspec))
+
+
+def accum_steps_for(cfg: ModelConfig, shape: ShapeSpec, mesh) -> int:
+    """Microbatch count: bound per-chip remat-saved residuals to ~2.5 GB."""
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            dp *= mesh.shape[a]
+    tp = mesh.shape["model"]
+    b_loc = max(shape.global_batch // dp, 1)
+    s_loc = shape.seq_len // tp if shape.seq_len % tp == 0 else shape.seq_len
+    resid = cfg.num_periods * b_loc * s_loc * cfg.d_model * 2  # bf16
+    # per-layer backward working set also scales with the microbatch:
+    # selective-scan f32 chunk states for mamba-1 dominate (jamba)
+    layer_ws = 0
+    if cfg.mamba is not None and cfg.mamba.version == 1:
+        # calibrated against measured jamba peaks (§Perf): ~4 full-seq f32
+        # streams/layer (u, dt, y, z; 4 B each) x ~16x scan/assoc/backward
+        # transients (measured: 64.7 GB at k=1 -> 20.6 GB at k=4)
+        layer_ws = b_loc * shape.seq_len * (cfg.d_inner // tp) * 4 * 64
+    k = 1
+    while (max(resid, layer_ws) / k > 2.5e9 and k < 8
+           and shape.global_batch // (dp * 2 * k) >= 1):
+        k *= 2
+    import os
+
+    return int(os.environ.get("REPRO_ACCUM", k))  # env override for §Perf
+
+
+def input_specs(arch: str, shape_name: str, mesh, rules: Optional[ShardingRules] = None):
+    """ShapeDtypeStruct stand-ins for every input of the cell's step fn."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    tp = mesh.shape["model"]
+    ec = make_exec_config(cfg, tp)
+    rules = rules or rules_for(cfg, shape.kind, shape.seq_len, shape.global_batch)
+    B, S = shape.global_batch, shape.seq_len
+    bspec = pspec_for(("batch", "seq"), rules, mesh)
+    defs = model_param_defs(cfg, ec)
+    params = param_shape_structs(defs, jnp.bfloat16, rules, mesh)
+
+    if shape.kind == "train":
+        from repro.training.optimizer import zero1_shardings
+
+        osh = zero1_shardings(defs, rules, mesh)
+        moments = tree_map_defs(
+            lambda d: jax.ShapeDtypeStruct(d.shape, jnp.float32), defs
+        )
+        opt = {
+            "mu": jax.tree_util.tree_map(
+                lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+                moments, osh["mu"], is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+            ),
+            "nu": jax.tree_util.tree_map(
+                lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+                moments, osh["nu"], is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+            ),
+            "count": jax.ShapeDtypeStruct((), jnp.int32, sharding=osh["count"]),
+        }
+        batch = {
+            "tokens": _struct((B, S), jnp.int32, mesh, bspec),
+            "targets": _struct((B, S), jnp.int32, mesh, bspec),
+        }
+        if cfg.frontend == "encodec":
+            espec = pspec_for(("batch", "seq", "embed"), rules, mesh)
+            batch["embeds"] = _struct((B, S, cfg.d_model), jnp.bfloat16, mesh, espec)
+        return dict(params=params, opt_state=opt, batch=batch)
+
+    if shape.kind == "prefill":
+        out = dict(params=params)
+        if cfg.frontend == "encodec":
+            espec = pspec_for(("batch", "seq", "embed"), rules, mesh)
+            out["embeds"] = _struct((B, S, cfg.d_model), jnp.bfloat16, mesh, espec)
+        else:
+            out["tokens"] = _struct((B, S), jnp.int32, mesh, bspec)
+        return out
+
+    # decode: one new token against a seq_len-deep cache
+    cache_defs = init_cache_defs(cfg, ec, B, S)
+    cache = tree_map_defs(
+        lambda d: jax.ShapeDtypeStruct(
+            d.shape, jnp.bfloat16, sharding=sharding_for(d.axes, rules, mesh)
+        ),
+        cache_defs,
+    )
+    tspec = pspec_for(("batch", "seq"), rules, mesh)
+    out = dict(
+        params=params,
+        cache=cache,
+        positions=_struct((B,), jnp.int32, mesh, pspec_for(("batch",), rules, mesh)),
+    )
+    if cfg.frontend == "encodec":
+        espec = pspec_for(("batch", "seq", "embed"), rules, mesh)
+        out["embeds"] = _struct((B, 1, cfg.d_model), jnp.bfloat16, mesh, espec)
+    else:
+        out["tokens"] = _struct((B, 1), jnp.int32, mesh, tspec)
+    return out
+
+
+def build_step(arch: str, shape_name: str, mesh, rules: Optional[ShardingRules] = None):
+    """Returns (step_fn, example_structs_kwargs, rules) ready to lower."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not shape_applicable(cfg, shape):
+        raise ValueError(f"{arch} x {shape_name}: inapplicable (see DESIGN.md §7)")
+    tp = mesh.shape["model"]
+    ec = make_exec_config(cfg, tp)
+    rules = rules or rules_for(cfg, shape.kind, shape.seq_len, shape.global_batch)
+    specs = input_specs(arch, shape_name, mesh, rules)
+
+    if shape.kind == "train":
+        tcfg = TrainStepConfig(
+            opt=AdamWConfig(), accum_steps=accum_steps_for(cfg, shape, mesh)
+        )
+        step, _ = make_train_step(cfg, ec, rules, mesh, tcfg)
+
+        def train_step(params, opt_state, batch):
+            return step(params, opt_state, batch)
+
+        return step, specs, rules
+
+    if shape.kind == "prefill":
+
+        def prefill_step(params, tokens=None, embeds=None):
+            h, cache, _ = forward(
+                params, cfg, ec, rules=rules, mesh=mesh, tokens=tokens,
+                embeds=embeds, mode="prefill",
+            )
+            logits = logits_for(params, cfg, h[:, -1:], rules, mesh)
+            return logits, cache
+
+        return jax.jit(prefill_step), specs, rules
+
+    def serve_step(params, cache, positions, tokens=None, embeds=None):
+        h, new_cache, _ = forward(
+            params, cfg, ec, rules=rules, mesh=mesh, tokens=tokens,
+            embeds=embeds, positions=positions, cache=cache, mode="decode",
+        )
+        logits = logits_for(params, cfg, h, rules, mesh)
+        return logits, new_cache
+
+    return jax.jit(serve_step, donate_argnums=(1,)), specs, rules
+
+
+def all_cells():
+    """The assigned 10 archs x 4 shapes grid (minus documented skips)."""
+    from repro.configs import ASSIGNED_ARCHS
+
+    cells = []
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for shape_name, shape in SHAPES.items():
+            cells.append((arch, shape_name, shape_applicable(cfg, shape)))
+    return cells

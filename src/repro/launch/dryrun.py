@@ -1,0 +1,115 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost/collective analysis.
+
+MUST be run as its own process (the device-count flag above must precede any
+jax initialization):
+
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        [--arch chameleon-34b] [--shape train_4k] [--multi-pod] \
+        [--out benchmarks/dryrun_results] [--tp 16] [--rules default]
+
+With no filters it sweeps the full 10x4 grid (minus the documented
+long_500k skips) on the single-pod 16x16 mesh; --multi-pod switches to the
+2x16x16 = 512-chip mesh (the 'pod' axis sharding proof).
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             rules_name: str = "default") -> dict:
+    from repro.launch.cells import build_step, input_specs
+    from repro.launch.hlo_analysis import analyze_compiled
+    from repro.launch.mesh import make_production_mesh, mesh_chips
+    from repro.launch.rules_presets import resolve_rules
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chips(mesh)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    rules = resolve_rules(rules_name, arch, shape_name)
+    step, specs, rules = build_step(arch, shape_name, mesh, rules)
+    with jax.set_mesh(mesh):
+        if shape_name.startswith("train"):
+            lowered = step.lower(specs["params"], specs["opt_state"], specs["batch"])
+        elif shape_name.startswith("prefill"):
+            lowered = step.lower(
+                specs["params"], tokens=specs.get("tokens"), embeds=specs.get("embeds")
+            )
+        else:
+            lowered = step.lower(
+                specs["params"], specs["cache"], specs["positions"],
+                tokens=specs.get("tokens"), embeds=specs.get("embeds"),
+            )
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    info = analyze_compiled(compiled, chips)
+    info.update(
+        arch=arch, shape=shape_name, mesh=mesh_name, rules=rules_name,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2), ok=True,
+    )
+    print(f"[dryrun] {arch} x {shape_name} x {mesh_name} ({rules_name}): "
+          f"compile {t_compile:.1f}s")
+    print("  memory_analysis:", compiled.memory_analysis())
+    ca = compiled.cost_analysis() or {}
+    print(f"  cost_analysis: flops={ca.get('flops', 0):.3e} "
+          f"bytes={ca.get('bytes accessed', 0):.3e}")
+    r = info["roofline"]
+    print(f"  roofline: compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+          f"collective={r['collective_s']:.4f}s dominant={r['dominant']}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}__{shape_name}__{mesh_name}__{rules_name}.json"
+        with open(os.path.join(out_dir, tag), "w") as f:
+            json.dump(info, f, indent=1)
+    return info
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--rules", default="default")
+    ap.add_argument("--out", default="benchmarks/dryrun_results")
+    args = ap.parse_args()
+
+    from repro.configs import SHAPES, ASSIGNED_ARCHS, get_config, shape_applicable
+
+    archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            if not shape_applicable(cfg, SHAPES[shape_name]):
+                print(f"[dryrun] SKIP {arch} x {shape_name} "
+                      f"(long_500k needs sub-quadratic attention; DESIGN.md §7)")
+                continue
+            try:
+                run_cell(arch, shape_name, args.multi_pod, args.out, args.rules)
+            except Exception as e:  # noqa: BLE001
+                failures.append((arch, shape_name, repr(e)))
+                print(f"[dryrun] FAIL {arch} x {shape_name}: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("[dryrun] all cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

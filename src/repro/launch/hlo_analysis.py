@@ -1,0 +1,155 @@
+"""Post-SPMD HLO analysis: collective bytes + roofline terms.
+
+cost_analysis() gives per-device FLOPs and HBM bytes; collective traffic is
+not in cost_analysis, so we parse the optimized (post-partitioning,
+per-device) HLO text and sum the result-shape bytes of every collective op.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict
+
+from repro.profiles.perf_model import HardwareSpec, V5E
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# one shape token: bf16[128,4096]{1,0}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# lhs of an HLO op: %name = <shape or tuple> opname(
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+
+
+def _shape_bytes(tok: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(tok):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    st = CollectiveStats()
+    for m in _OP_RE.finditer(hlo_text):
+        shape_tok, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_tok)
+        st.bytes_by_kind[kind] = st.bytes_by_kind.get(kind, 0) + b
+        st.count_by_kind[kind] = st.count_by_kind.get(kind, 0) + 1
+    return st
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    hw: HardwareSpec = V5E
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / self.hw.peak_flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_device / self.hw.hbm_bw
+
+    @property
+    def collective_s(self) -> float:
+        # conservative single-direction normalization: bytes / (link_bw x links)
+        return self.collective_bytes_per_device / (self.hw.ici_bw * self.hw.ici_links)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+        }
+
+
+def analyze_compiled(compiled, chips: int) -> dict:
+    """Roofline terms from the compiled per-device module.
+
+    XLA's cost_analysis counts while-loop bodies once; hlo_loop_cost
+    re-parses the module with loop-trip multipliers, giving the true
+    per-device dot FLOPs, collective bytes and an HBM-traffic proxy
+    (validated in tests/test_hlo_cost.py). Raw cost_analysis numbers are
+    kept alongside for reference.
+    """
+    from repro.launch.hlo_loop_cost import analyze as loop_analyze
+
+    hlo = compiled.as_text()
+    ca = compiled.cost_analysis() or {}
+    lc = loop_analyze(hlo)
+    mem = compiled.memory_analysis()
+    roof = Roofline(lc.dot_flops, lc.hbm_bytes, lc.collective_bytes)
+    return {
+        "roofline": roof.as_dict(),
+        "raw_cost_analysis": {
+            "flops_body_once": float(ca.get("flops", 0.0)),
+            "bytes_accessed_body_once": float(ca.get("bytes accessed", 0.0)),
+        },
+        "collectives": {
+            "bytes_by_kind": lc.collective_bytes_by_kind,
+            "count_by_kind": lc.collective_count_by_kind,
+        },
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes_estimate": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "chips": chips,
+    }

@@ -1,0 +1,30 @@
+"""Production mesh builders.
+
+Functions, not module-level constants — importing this module never touches
+jax device state (the dry-run sets the host-device count before any jax
+initialization, and smoke tests must keep seeing one device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi-pod adds a 2-pod leading axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = 1
+    for s in shape:
+        ndev *= s
+    devices = jax.devices()[:ndev]
+    return jax.make_mesh(
+        shape, axes, devices=devices,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def mesh_chips(mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

@@ -1,0 +1,35 @@
+"""Named sharding-rule presets for the dry-run / perf hillclimb.
+
+`default` delegates to parallel.sharding.rules_for (the baseline strategy
+documented in DESIGN.md §4). Additional presets are the hillclimb levers —
+each is one hypothesis from EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.configs import SHAPES, get_config
+from repro.parallel.sharding import DEFAULT_RULES, ShardingRules, rules_for
+
+
+def resolve_rules(name: str, arch: str, shape_name: str) -> Optional[ShardingRules]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    base = rules_for(cfg, shape.kind, shape.seq_len, shape.global_batch)
+    if name == "default":
+        return base
+    if name == "no-fsdp":  # replicate weights over data (baseline TP-only)
+        return base.override(embed=None, expert_embed=None)
+    if name == "fsdp-pod":  # shard weights over pod axis too
+        return base.override(embed=("data", "pod"))
+    if name == "seq-data":  # context-parallel decode over data axis
+        return base.override(batch=None, kv_seq=("pod", "data"))
+    if name == "zero-off":  # optimizer state replicated over data
+        return base.override(zero=None)
+    if name == "decode-2d":
+        # weight-stationary 2D decode: residual activations replicated over
+        # data so the contraction dim shards over data — per-token collective
+        # cost becomes O(activations) instead of O(weights) (§Perf,
+        # mistral-large decode iteration)
+        return base.override(res_batch=None, embed=("data",))
+    raise KeyError(f"unknown rules preset {name!r}")

@@ -1,0 +1,102 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch h2o-danube-1.8b --steps 50 --batch 8 --seq 128 \
+        [--reduced] [--devices 4] [--tp 2] [--ckpt-dir /tmp/ckpt] [--compress]
+
+On the CPU container use --reduced (full configs are exercised via the
+dry-run). On real hardware the same launcher runs the full config on the
+production mesh. Fault tolerance: re-running the same command resumes from
+the latest checkpoint automatically.
+"""
+import argparse
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--devices", type=int, default=0, help="host devices (0=real)")
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--compress", action="store_true", help="int8 grad compression")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--fresh", action="store_true", help="ignore existing ckpts")
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", "")
+        )
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config, reduced
+    from repro.core.weight_store import make_exec_mesh
+    from repro.models.model import model_param_defs
+    from repro.models.params import init_params
+    from repro.parallel.sharding import DEFAULT_RULES, make_exec_config
+    from repro.training.data import SyntheticDataset
+    from repro.training.grad_compress import CompressConfig
+    from repro.training.loop import LoopConfig, train_loop
+    from repro.training.optimizer import AdamWConfig
+    from repro.training.train_step import TrainStepConfig, init_opt_state, make_train_step
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    mesh = None
+    if args.tp > 1 or args.devices > 1:
+        mesh = make_exec_mesh(jax.devices(), args.tp)
+    ec = make_exec_config(cfg, args.tp)
+    defs = model_param_defs(cfg, ec)
+    params = init_params(defs, jax.random.PRNGKey(0), jnp.float32)
+    tcfg = TrainStepConfig(
+        opt=AdamWConfig(lr=args.lr, warmup_steps=10),
+        compress=CompressConfig(enabled=args.compress),
+        seq_chunk=min(512, args.seq),
+        block_q=min(512, args.seq),
+        block_k=min(512, args.seq),
+        accum_steps=args.accum,
+    )
+    step_fn, shardings = make_train_step(cfg, ec, DEFAULT_RULES, mesh, tcfg)
+    if mesh is not None and shardings is not None:
+        params = jax.device_put(params, shardings["params"])
+    opt_state = init_opt_state(params, tcfg)
+    if mesh is not None and shardings is not None:
+        opt_state = jax.tree_util.tree_map(
+            jax.device_put, opt_state, dict(shardings["opt_state"])
+        )
+    ds = SyntheticDataset(cfg, args.batch, args.seq)
+    if args.fresh and os.path.isdir(args.ckpt_dir):
+        import shutil
+
+        shutil.rmtree(args.ckpt_dir)
+    loop = LoopConfig(
+        total_steps=args.steps, ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir
+    )
+
+    def log(step, metrics):
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f}", flush=True)
+
+    state = train_loop(step_fn, params, opt_state, ds, loop, on_step=log)
+    if state.resumed_from:
+        print(f"(resumed from step {state.resumed_from})")
+    print(f"done: {state.step} steps, final loss {state.losses[-1]:.4f}, "
+          f"mean step {np.mean(state.step_times[3:]):.3f}s, "
+          f"stragglers {state.straggler_steps}")
+
+
+if __name__ == "__main__":
+    main()

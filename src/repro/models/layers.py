@@ -1,0 +1,68 @@
+"""Shared layer primitives: RMSNorm, RoPE, SwiGLU MLP."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+from repro.parallel.sharding import shard_constraint
+
+
+def rmsnorm(x, scale, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def norm_def(d_model: int) -> ParamDef:
+    # stored as (scale - 1) so zeros-init => identity-ish (gemma convention)
+    return ParamDef((d_model,), ("embed",), init="zeros")
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense SwiGLU MLP (column -> row parallel; one psum at the output)
+# ---------------------------------------------------------------------------
+def mlp_param_defs(d_model: int, d_ff: int):
+    return {
+        "w_gate": ParamDef((d_model, d_ff), ("embed", "mlp")),
+        "w_in": ParamDef((d_model, d_ff), ("embed", "mlp")),
+        "w_out": ParamDef((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(p, x, rules, mesh):
+    h = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["w_in"])
+    h = shard_constraint(jax.nn.silu(h) * u, ("res_batch", "seq", "act_mlp"), rules, mesh)
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_out"])
+    return shard_constraint(y, ("res_batch", "seq", "embed"), rules, mesh)
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)

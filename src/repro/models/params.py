@@ -1,0 +1,88 @@
+"""Minimal functional parameter system (no flax dependency).
+
+A model is described by a pytree of ``ParamDef`` leaves; materialization,
+sharding and AOT stand-ins (ShapeDtypeStructs for the dry-run) all derive
+from the same tree, so the compiled artifact and the runtime can never
+disagree about shapes or logical axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import ShardingRules, pspec_for, sharding_for
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones
+    scale: Optional[float] = None  # stddev; None => 1/sqrt(fan_in) (dim 0)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_map_defs(f, defs):
+    return jax.tree_util.tree_map(f, defs, is_leaf=is_def)
+
+
+def _materialize(d: ParamDef, key, dtype):
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    scale = d.scale
+    if scale is None:
+        fan_in = d.shape[0] if len(d.shape) > 1 else d.shape[-1]
+        scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, d.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(defs, key, dtype=jnp.float32):
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_materialize(d, k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def param_shardings(defs, rules: ShardingRules, mesh):
+    return tree_map_defs(lambda d: sharding_for(d.axes, rules, mesh), defs)
+
+
+def param_pspecs(defs, rules: ShardingRules, mesh):
+    return tree_map_defs(lambda d: pspec_for(d.axes, rules, mesh), defs)
+
+
+def param_shape_structs(defs, dtype, rules: Optional[ShardingRules] = None, mesh=None):
+    """ShapeDtypeStruct stand-ins (with shardings if a mesh is given) — the
+    dry-run path: no device allocation ever happens."""
+
+    def mk(d: ParamDef):
+        sh = sharding_for(d.axes, rules, mesh) if rules is not None else None
+        return jax.ShapeDtypeStruct(d.shape, dtype, sharding=sh)
+
+    return tree_map_defs(mk, defs)
+
+
+def count_params(defs) -> int:
+    leaves = jax.tree_util.tree_leaves(defs, is_leaf=is_def)
+    return int(sum(int(np.prod(d.shape)) for d in leaves))
+
+
+def stack_defs(defs, n: int, axis_name: str = "periods"):
+    """Prefix every leaf with a leading stacking dim (for lax.scan layers)."""
+    return tree_map_defs(
+        lambda d: ParamDef((n,) + d.shape, (axis_name,) + d.axes, d.init, d.scale),
+        defs,
+    )

@@ -1,0 +1,17 @@
+from repro.parallel.sharding import (
+    DEFAULT_RULES,
+    ExecConfig,
+    ShardingRules,
+    make_exec_config,
+    pspec_for,
+    shard_constraint,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "ExecConfig",
+    "ShardingRules",
+    "make_exec_config",
+    "pspec_for",
+    "shard_constraint",
+]

@@ -1,0 +1,3 @@
+from repro.profiles.perf_model import HardwareSpec, PerfModel, V5E
+
+__all__ = ["HardwareSpec", "PerfModel", "V5E"]

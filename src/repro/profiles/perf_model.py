@@ -1,0 +1,201 @@
+"""Analytic TPU performance model — the planner's "offline profiles".
+
+The paper assumes admins profile each GPU type offline (its Fig. 2). We run on
+CPU, so profiles come from a first-principles roofline model of the target
+chip (TPU v5e by default: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI).
+On real hardware the same table format would be produced by measurement
+(profiles/profiler.py); the planner only consumes the interface below.
+
+Hardware adaptation note (DESIGN.md §2): the paper's small-batch decode-TP
+benefit is a GPU L2 effect. The TPU analogues modeled here:
+  (1) aggregate HBM bandwidth scales with TP while the all-reduce cost grows
+      — per-chip-normalized decode throughput is ~flat then degrades, giving
+      the same "right TP depends on batch" crossover;
+  (2) a VMEM-residency bonus when the per-chip weight shard fits in VMEM
+      (128 MB) — weights stop paying HBM reads per token at high TP on small
+      models, which *increases* normalized throughput exactly like the
+      paper's L2 effect.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12  # bf16
+    hbm_bw: float = 819e9  # bytes/s
+    hbm_bytes: float = 16e9
+    ici_bw: float = 50e9  # bytes/s per link per direction
+    ici_links: int = 4
+    ici_latency_s: float = 1e-6  # per hop
+    vmem_bytes: float = 128e6
+    flops_eff: float = 0.55  # achievable fraction of peak (matmul-heavy)
+    bw_eff: float = 0.8
+
+
+V5E = HardwareSpec()
+
+
+@dataclass(frozen=True)
+class PerfModel:
+    cfg: ModelConfig
+    hw: HardwareSpec = V5E
+    dtype_bytes: int = 2
+
+    # ---- derived model quantities ------------------------------------
+    @property
+    def n_params(self) -> int:
+        return self.cfg.param_count()
+
+    @property
+    def n_active(self) -> int:
+        return self.cfg.active_param_count()
+
+    def kv_bytes_per_token(self) -> float:
+        c = self.cfg
+        if c.family == "ssm":
+            return 0.0  # state is O(1) in sequence length
+        per_layer = 2 * c.num_kv_heads * c.head_dim * self.dtype_bytes
+        return per_layer * c.n_attn_layers
+
+    def state_bytes(self) -> float:
+        """O(1) recurrent state (mamba) per sequence."""
+        c = self.cfg
+        if c.mamba is None:
+            return 0.0
+        m = c.mamba
+        if m.version == 2:
+            per = (c.d_inner // m.head_dim) * m.head_dim * m.d_state
+        else:
+            per = c.d_inner * m.d_state
+        return per * c.n_mamba_layers * 4  # f32 state
+
+    # ---- collective models -------------------------------------------
+    def allreduce_time(self, bytes_per_chip: float, tp: int) -> float:
+        if tp <= 1:
+            return 0.0
+        ring = 2.0 * (tp - 1) / tp * bytes_per_chip / (self.hw.ici_bw * self.hw.ici_links)
+        return ring + 2.0 * math.log2(tp) * self.hw.ici_latency_s
+
+    # ---- prefill -------------------------------------------------------
+    def prefill_time_s(self, prompt_len: int, tp: int, batch: int = 1) -> float:
+        """Time to prefill `batch` prompts of `prompt_len` on a TP-`tp` group."""
+        tokens = prompt_len * batch
+        flops = 2.0 * self.n_active * tokens
+        # attention quadratic term
+        c = self.cfg
+        if c.n_attn_layers:
+            win = c.attn.window or prompt_len
+            eff_ctx = min(prompt_len, win)
+            flops += (
+                4.0 * c.num_heads * c.head_dim * prompt_len * eff_ctx
+                * c.n_attn_layers * batch * 0.5
+            )
+        t_compute = flops / (tp * self.hw.peak_flops * self.hw.flops_eff)
+        t_mem = (self.n_params * self.dtype_bytes / tp) / (self.hw.hbm_bw * self.hw.bw_eff)
+        # per-layer collectives: 1 all-reduce of activations per block
+        act_bytes = tokens * c.d_model * self.dtype_bytes / tp
+        t_coll = 2 * c.num_layers * self.allreduce_time(act_bytes, tp)
+        return max(t_compute, t_mem) + t_coll
+
+    def ttft_ms(self, prompt_len: int, tp: int, batch: int = 1) -> float:
+        return self.prefill_time_s(prompt_len, tp, batch) * 1e3
+
+    # ---- decode --------------------------------------------------------
+    def decode_step_time_s(self, batch: int, ctx_len: int, tp: int) -> float:
+        """One decode iteration for `batch` sequences with context `ctx_len`."""
+        c = self.cfg
+        w_bytes = self.n_params * self.dtype_bytes / tp
+        # VMEM residency: shards that fit stay resident (TPU analogue of the
+        # paper's L2 effect) — weight HBM traffic vanishes.
+        if w_bytes <= self.hw.vmem_bytes * 0.8:
+            w_bytes = 0.0
+        kv_bytes = batch * self.kv_bytes_per_token() * min(
+            ctx_len, self.cfg.attn.window or ctx_len
+        ) / tp
+        state_bytes = batch * self.state_bytes() / tp
+        t_mem = (w_bytes + kv_bytes + state_bytes) / (self.hw.hbm_bw * self.hw.bw_eff)
+        flops = 2.0 * self.n_active * batch
+        t_compute = flops / (tp * self.hw.peak_flops * self.hw.flops_eff)
+        act_bytes = batch * c.d_model * self.dtype_bytes / tp
+        t_coll = 2 * c.num_layers * self.allreduce_time(act_bytes, tp)
+        return max(t_mem, t_compute) + t_coll
+
+    def tpot_ms(self, batch: int, ctx_len: int, tp: int) -> float:
+        return self.decode_step_time_s(batch, ctx_len, tp) * 1e3
+
+    # ---- memory feasibility ---------------------------------------------
+    def fits(self, tp: int, kv_headroom: float = 0.15) -> bool:
+        """Do the weights (+ some KV headroom) fit a TP-`tp` group's HBM?
+        (The paper's 'minimal TP level that a model fits'.)"""
+        need = self.n_params * self.dtype_bytes * (1.0 + kv_headroom)
+        return need <= self.hw.hbm_bytes * tp * 0.92
+
+    def min_tp(self, candidate_tps=(1, 2, 4, 8, 16)) -> int:
+        for tp in sorted(candidate_tps):
+            if self.fits(tp):
+                return tp
+        return max(candidate_tps)
+
+    # ---- SLO-constrained throughputs (planner inputs) -------------------
+    def max_prefill_rps(self, prompt_len: int, tp: int, ttft_slo_ms: float) -> float:
+        """Max sustainable req/s on one TP-`tp` prefill group under the SLO.
+
+        TTFT ≈ queue + execution; sustained at utilization u, M/D/1-ish queue
+        inflation 1/(1-u). We find the largest u where TTFT is still met.
+        """
+        if not self.fits(tp):
+            return 0.0
+        t_exec = self.prefill_time_s(prompt_len, tp)
+        if t_exec * 1e3 > ttft_slo_ms:
+            return 0.0
+        slo_s = ttft_slo_ms / 1e3
+        # TTFT = t_exec * (1 + u/(1-u)) <= slo — M/M/1-like wait, deliberately
+        # pessimistic because production arrivals are burstier than Poisson
+        # (ServeGen/BurstGPT); an optimistic bound oversubscribes prefill and
+        # blows the TTFT tail.
+        lo, hi = 0.0, 0.99
+        for _ in range(40):
+            u = 0.5 * (lo + hi)
+            ttft = t_exec * (1.0 + u / max(1e-9, 1.0 - u))
+            if ttft <= slo_s:
+                lo = u
+            else:
+                hi = u
+        return 0.9 * lo / t_exec
+
+    def max_decode_batch(self, ctx_len: int, tp: int, tpot_slo_ms: float) -> int:
+        """Largest batch a TP-`tp` decode group can run within the TPOT SLO."""
+        if not self.fits(tp):
+            return 0
+        lo, hi = 0, 4096
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            if self.tpot_ms(mid, ctx_len, tp) <= tpot_slo_ms:
+                lo = mid
+            else:
+                hi = mid - 1
+        # KV memory cap
+        kv_per_seq = self.kv_bytes_per_token() * min(
+            ctx_len, self.cfg.attn.window or ctx_len
+        ) + self.state_bytes()
+        if kv_per_seq > 0:
+            hbm_free = self.hw.hbm_bytes * tp * 0.9 - self.n_params * self.dtype_bytes
+            lo = min(lo, max(int(hbm_free / kv_per_seq), 0))
+        return lo
+
+    def max_decode_rps(
+        self, ctx_len: int, out_len: int, tp: int, tpot_slo_ms: float
+    ) -> float:
+        b = self.max_decode_batch(ctx_len, tp, tpot_slo_ms)
+        if b <= 0:
+            return 0.0
+        t = self.decode_step_time_s(b, ctx_len, tp)
+        tok_rate = b / t
+        return tok_rate / max(out_len, 1)

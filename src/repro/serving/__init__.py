@@ -1,0 +1,4 @@
+from repro.serving.request import Request, RequestState
+from repro.serving.engine import ServingEngine, EngineConfig
+
+__all__ = ["Request", "RequestState", "ServingEngine", "EngineConfig"]

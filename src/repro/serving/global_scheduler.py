@@ -1,0 +1,94 @@
+"""Global scheduler (paper §3.3.2): FCFS dispatch with SLO feasibility
+accounting, least-loaded placement, round-robin spill, background routing.
+
+The scheduler maintains a per-group *SLO-compliant available serving
+bandwidth*: the group's profiled max throughput (THP for prefill groups)
+minus the rate already committed to assigned-but-unfinished requests. A
+request is *feasible* if its tier has a group with spare bandwidth;
+infeasible requests are spilled round-robin across all prefill groups as
+best-effort work.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+
+@dataclass
+class GroupHandle:
+    """Scheduler-visible view of one TP group."""
+
+    gid: int
+    tier: Optional[str]  # None = shared / any
+    stage: str  # prefill | decode | mixed
+    tp: int
+    max_rps: float  # profiled THP/THD for the group's tier & tp
+    committed_rps: float = 0.0
+    accepts_background: bool = True
+    queue_len: int = 0
+
+    @property
+    def available_rps(self) -> float:
+        return max(self.max_rps - self.committed_rps, 0.0)
+
+
+class GlobalScheduler:
+    def __init__(self, groups: Sequence[GroupHandle]):
+        self.groups = {g.gid: g for g in groups}
+        self._rr = itertools.count()
+        self._rr_bg = itertools.count()
+
+    def replace_groups(self, groups: Sequence[GroupHandle]) -> None:
+        old = self.groups
+        self.groups = {g.gid: g for g in groups}
+        for gid, g in self.groups.items():
+            if gid in old:
+                g.committed_rps = old[gid].committed_rps
+
+    def _prefill_groups(self, tier: Optional[str] = None) -> List[GroupHandle]:
+        out = [
+            g for g in self.groups.values()
+            if g.stage in ("prefill", "mixed")
+            and (tier is None or g.tier in (tier, None))
+        ]
+        return out
+
+    def dispatch(self, tier: str, rate_cost: float, background: bool = False):
+        """Returns (group, feasible). rate_cost ~ 1/expected_service_rate —
+        the request's contribution to committed bandwidth."""
+        if background:
+            cands = [g for g in self._prefill_groups() if g.accepts_background]
+            if not cands:
+                cands = self._prefill_groups()
+            g = cands[next(self._rr_bg) % len(cands)]
+            return g, True
+
+        tier_groups = self._prefill_groups(tier)
+        feas = [g for g in tier_groups if g.available_rps >= rate_cost]
+        if feas:
+            g = min(feas, key=lambda g: (g.committed_rps / max(g.max_rps, 1e-9), g.queue_len))
+            g.committed_rps += rate_cost
+            return g, True
+        # infeasible: spill round-robin over ALL prefill groups (§3.3.2)
+        cands = self._prefill_groups()
+        if not cands:
+            cands = list(self.groups.values())
+        g = cands[next(self._rr) % len(cands)]
+        return g, False
+
+    def complete(self, gid: int, rate_cost: float) -> None:
+        g = self.groups.get(gid)
+        if g is not None:
+            g.committed_rps = max(g.committed_rps - rate_cost, 0.0)
+
+    def decode_target(self, tier: str) -> Optional[GroupHandle]:
+        cands = [
+            g for g in self.groups.values()
+            if g.stage == "decode" and g.tier in (tier, None)
+        ]
+        if not cands:
+            cands = [g for g in self.groups.values() if g.stage == "mixed"]
+        if not cands:
+            return None
+        return min(cands, key=lambda g: g.queue_len)

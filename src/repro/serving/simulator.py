@@ -1,0 +1,780 @@
+"""Calibrated discrete-event (fluid-tick) serving simulator.
+
+Replays 10-minute traces at full cluster scale against the analytic profile
+model (profiles/perf_model.py, same constants as the dry-run roofline). This
+is what produces the paper's evaluation figures: every baseline the paper
+compares against is a `Policy` here, and Nitsum itself is the planner +
+global/local schedulers + ms-level switch mechanisms.
+
+Execution model per group (one TP group of `tp` chips):
+  * prefill runs serially (FCFS) and, in mixed groups, preempts decode —
+    which reproduces the prefill/decode interference the paper's
+    disaggregation baselines suffer from;
+  * decode is a continuous batch of up to `batch_cap` requests, each gaining
+    tokens at 1/decode_step_time(batch, ctx, tp);
+  * reconfiguration blocks the group for the mechanism's switch cost:
+    ~ms for Nitsum (zero-copy weights + pipelined KV migration), seconds to
+    tens of seconds for the straw-men (weight reload, per-page migration).
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.goodput import GoodputMeter, RequestRecord, SLOTier
+from repro.core.migration import MigrationModel
+from repro.core.planner import Planner, PlannerInputs, TierDemand
+from repro.profiles.perf_model import PerfModel
+from repro.serving.global_scheduler import GlobalScheduler, GroupHandle
+from repro.traces.workload import TraceRequest, Workload
+
+
+@dataclass(frozen=True)
+class GroupSpec:
+    tier: Optional[str]  # None = shared
+    stage: str  # prefill | decode | mixed
+    tp: int
+
+
+@dataclass
+class SimReq:
+    tr: TraceRequest
+    feasible: bool = True
+    background: bool = False
+    tokens: float = 0.0
+    prefill_left_s: float = 0.0
+    first_token_s: Optional[float] = None
+    finish_s: Optional[float] = None
+    group: Optional["Group"] = None
+    rate_cost: float = 0.0
+    dispatch_gid: Optional[int] = None
+
+    @property
+    def ctx(self) -> float:
+        return self.tr.prompt_len + self.tokens
+
+
+class Group:
+    def __init__(self, gid: int, spec: GroupSpec, sim: "Simulator"):
+        self.gid = gid
+        self.spec = spec
+        self.sim = sim
+        self.prefill_q: deque = deque()
+        self.cur: Optional[SimReq] = None
+        self.decoding: List[SimReq] = []
+        self.blocked_until: float = 0.0
+        self.batch_cap = sim.decode_cap(spec)
+
+    @property
+    def queue_len(self) -> int:
+        return len(self.prefill_q) + (1 if self.cur else 0) + len(self.decoding)
+
+    def live_requests(self) -> List[SimReq]:
+        out = list(self.prefill_q) + self.decoding
+        if self.cur is not None:
+            out.append(self.cur)
+        return out
+
+    def clear(self) -> List[SimReq]:
+        out = self.live_requests()
+        self.prefill_q.clear()
+        self.decoding.clear()
+        self.cur = None
+        return out
+
+    def _next_prefill(self) -> SimReq:
+        """SLO-aware policies serve feasible requests first (local scheduler
+        queue priority, §3.3.2); SLO-agnostic engines are FCFS."""
+        if not self.sim.policy.slo_aware_prefill:
+            return self.prefill_q.popleft()
+        best_i, best_key = 0, None
+        for i, r in enumerate(self.prefill_q):
+            key = (r.background, not r.feasible, r.tr.arrival_s)
+            if best_key is None or key < best_key:
+                best_i, best_key = i, key
+        self.prefill_q.rotate(-best_i)
+        r = self.prefill_q.popleft()
+        self.prefill_q.rotate(best_i)
+        return r
+
+    def tick(self, now: float, dt: float) -> None:
+        if now < self.blocked_until:
+            return
+        budget = dt
+        # ---- prefill (preempts decode in mixed groups) ----
+        if self.spec.stage in ("prefill", "mixed"):
+            while budget > 1e-12:
+                if self.cur is None:
+                    if not self.prefill_q:
+                        break
+                    self.cur = self._next_prefill()
+                    self.cur.prefill_left_s = self.sim.perf.prefill_time_s(
+                        self.cur.tr.prompt_len, self.spec.tp
+                    )
+                take = min(budget, self.cur.prefill_left_s)
+                self.cur.prefill_left_s -= take
+                budget -= take
+                if self.cur.prefill_left_s <= 1e-12:
+                    self.sim.on_prefill_done(self.cur, self, now + (dt - budget))
+                    self.cur = None
+        # ---- decode ----
+        if self.spec.stage in ("decode", "mixed") and self.decoding and budget > 1e-12:
+            # feasible first (local scheduler priority), then best-effort/bg
+            self.decoding.sort(key=lambda r: (r.background, not r.feasible, r.tr.arrival_s))
+            batch = self.decoding[: self.batch_cap]
+            b = len(batch)
+            ctx = float(np.mean([r.ctx for r in batch]))
+            step = self.sim.perf.decode_step_time_s(b, ctx, self.spec.tp)
+            gain = budget / step
+            fin = []
+            for r in batch:
+                r.tokens += gain
+                if r.tokens >= r.tr.output_len:
+                    r.finish_s = now + dt
+                    fin.append(r)
+            for r in fin:
+                self.decoding.remove(r)
+                self.sim.on_finish(r)
+
+
+# ===========================================================================
+# Policies (the paper's systems)
+# ===========================================================================
+class Policy:
+    name = "base"
+    reconfigures = False
+    slo_aware_batching = True  # cap decode batch by the tier's TPOT SLO
+    slo_aware_prefill = False  # feasible-first prefill queueing
+
+    def __init__(self, perf: PerfModel, tiers: Sequence[SLOTier], candidate_tps=(1, 2, 4, 8)):
+        self.perf = perf
+        self.tiers = {t.name: t for t in tiers}
+        self.tps = tuple(candidate_tps)
+
+    def decode_cap(self, sim: "Simulator", spec: "GroupSpec") -> int:
+        if not self.slo_aware_batching:
+            # SLO-agnostic engines batch to the memory limit
+            return max(self.perf.max_decode_batch(2048, spec.tp, 1e9), 1)
+        tpot = None
+        for t in self.tiers.values():
+            if spec.tier in (None, t.name) and not t.background:
+                tpot = t.tpot_ms if tpot is None else max(tpot, t.tpot_ms)
+        if tpot is None:
+            tpot = 1e9
+        return max(self.perf.max_decode_batch(2048, spec.tp, tpot), 1)
+
+    def estimate_specs(self, sim: "Simulator", specs) -> float:
+        """Estimated SLO-served rps of a group layout under current demand.
+
+        Shared (tier=None) groups are split demand-proportionally across
+        tiers — a hard 50/50 split would systematically undervalue shared
+        pools and bias the planner toward needless partitioning."""
+        demands = {}
+        for t in self.tiers.values():
+            if not t.background:
+                d = sim.tier_stats(t.name)
+                if d.rps > 0:
+                    demands[t.name] = d
+        tot_rps = sum(d.rps for d in demands.values()) or 1.0
+        total = 0.0
+        for name, d in demands.items():
+            t = self.tiers[name]
+            thp = thd = 0.0
+            for s in specs:
+                if s.tier not in (None, name):
+                    continue
+                # mixed groups time-share stages adaptively — 0.8, not 0.5
+                # (calibrated against realized sim goodput; a hard split
+                # undervalues colocation and biases toward partitioning)
+                w = 0.8 if s.stage == "mixed" else 1.0
+                share = 1.0 if s.tier == name else d.rps / tot_rps
+                if s.stage in ("prefill", "mixed"):
+                    thp += w * share * self.perf.max_prefill_rps(
+                        d.prompt_len, s.tp, t.ttft_ms
+                    )
+                if s.stage in ("decode", "mixed"):
+                    thd += w * share * self.perf.max_decode_rps(
+                        d.prompt_len, d.output_len, s.tp, t.tpot_ms
+                    )
+            total += min(thp, thd, d.rps)
+        return total
+
+    def initial_specs(self, sim: "Simulator") -> List[GroupSpec]:
+        raise NotImplementedError
+
+    def window(self, sim: "Simulator") -> Optional[List[GroupSpec]]:
+        return None
+
+    def switch_cost_s(self, sim: "Simulator", group: Group) -> float:
+        return 0.0
+
+    def route(self, sim: "Simulator", req: SimReq) -> Group:
+        """Default: least-loaded compatible prefill/mixed group."""
+        cands = [
+            g for g in sim.groups
+            if g.spec.stage in ("prefill", "mixed")
+            and (g.spec.tier in (None, req.tr.tier))
+        ]
+        if not cands:
+            cands = sim.groups
+        return min(cands, key=lambda g: g.queue_len)
+
+    def decode_target(self, sim: "Simulator", req: SimReq, frm: Group) -> Group:
+        if frm.spec.stage == "mixed":
+            return frm
+        cands = [
+            g for g in sim.groups
+            if g.spec.stage == "decode" and g.spec.tier in (None, req.tr.tier)
+        ]
+        if not cands:
+            return frm
+        return min(cands, key=lambda g: len(g.decoding))
+
+
+class StaticPolicy(Policy):
+    """SGLang-like static TP. disaggregated=True adds PD split (SGLang-PD)."""
+
+    slo_aware_batching = False  # vanilla engines are SLO-agnostic
+
+    def __init__(self, perf, tiers, tp=1, disaggregated=False, prefill_frac=0.35, **kw):
+        super().__init__(perf, tiers, **kw)
+        self.tp = tp
+        self.disagg = disaggregated
+        self.prefill_frac = prefill_frac
+        self.name = f"sglang-tp{tp}" + ("-pd" if disaggregated else "")
+
+    def initial_specs(self, sim):
+        n_groups = sim.n_chips // self.tp
+        if not self.disagg:
+            return [GroupSpec(None, "mixed", self.tp)] * n_groups
+        n_p = max(int(round(n_groups * self.prefill_frac)), 1)
+        n_d = max(n_groups - n_p, 1)
+        return [GroupSpec(None, "prefill", self.tp)] * n_p + [
+            GroupSpec(None, "decode", self.tp)
+        ] * n_d
+
+
+class SLOStaticPolicy(StaticPolicy):
+    """Static best-for-trace TP + SLO-aware batching/queueing (the paper's
+    ablation step 3: 'simple batch rule that defers requests that cannot
+    meet their SLO', no tier partitioning, no dynamic TP)."""
+
+    slo_aware_batching = True
+    slo_aware_prefill = True
+
+    def __init__(self, perf, tiers, **kw):
+        # best static TP for the pool by the same profile the planner uses
+        best, best_tp = -1.0, perf.min_tp(kw.get("candidate_tps", (1, 2, 4, 8)))
+        for tp in kw.get("candidate_tps", (1, 2, 4, 8)):
+            t0 = list(tiers)[0]
+            thp = perf.max_prefill_rps(1024, tp, t0.ttft_ms)
+            thd = perf.max_decode_rps(1024, 128, tp, t0.tpot_ms)
+            rate = min(thp, thd) / tp if min(thp, thd) > 0 else 0.0
+            if rate > best:
+                best, best_tp = rate, tp
+        super().__init__(perf, tiers, tp=best_tp, **kw)
+        self.name = f"sglang-slo-tp{best_tp}"
+
+
+class SplitPolicy(Policy):
+    """Per-tier static partitions; per-tier offline-best TP (paper 'Split').
+    Each partition runs a vanilla (SLO-agnostic) engine."""
+
+    name = "split"
+    slo_aware_batching = False
+
+    def initial_specs(self, sim):
+        tiers = [t for t in self.tiers.values() if not t.background]
+        share = sim.n_chips // max(len(tiers), 1)
+        specs = []
+        for t in tiers:
+            d = sim.tier_stats(t.name)
+            best, best_tp = -1.0, self.tps[0]
+            for tp in self.tps:
+                if tp > share:
+                    continue
+                thp = self.perf.max_prefill_rps(d.prompt_len, tp, t.ttft_ms)
+                thd = self.perf.max_decode_rps(d.prompt_len, d.output_len, tp, t.tpot_ms)
+                rate = min(thp, thd) / tp if min(thp, thd) > 0 else 0.0
+                if rate > best:
+                    best, best_tp = rate, tp
+            specs += [GroupSpec(t.name, "mixed", best_tp)] * (share // best_tp)
+        return specs
+
+
+class LlumnixPolicy(StaticPolicy):
+    """Request-level control only: static TP + per-window queue rebalancing
+    and strict-tier priority. No execution reconfiguration."""
+
+    def __init__(self, perf, tiers, tp=1, **kw):
+        super().__init__(perf, tiers, tp=tp, disaggregated=False, **kw)
+        self.name = f"llumnix-tp{tp}"
+
+    reconfigures = True
+    slo_aware_batching = False
+
+    def window(self, sim):
+        # migrate queued prefills from the most- to the least-loaded groups
+        groups = sorted(sim.groups, key=lambda g: g.queue_len)
+        lo, hi = groups[0], groups[-1]
+        moved = 0
+        while len(hi.prefill_q) - len(lo.prefill_q) > 2 and moved < 8:
+            r = hi.prefill_q.pop()
+            lo.prefill_q.append(r)
+            r.group = lo
+            moved += 1
+        if moved:
+            # live migration overhead hidden but not free: brief stall
+            hi.blocked_until = max(hi.blocked_until, sim.now + 0.05)
+        for g in sim.groups:  # strict-priority queues
+            g.prefill_q = deque(
+                sorted(g.prefill_q, key=lambda r: (r.tr.tier != "strict", r.tr.arrival_s))
+            )
+        return None
+
+
+class ChironPolicy(StaticPolicy):
+    """Hierarchical autoscaling: adjusts per-tier group counts by queue
+    backpressure; static TP; batch caps adapted to SLO."""
+
+    def __init__(self, perf, tiers, tp=1, **kw):
+        super().__init__(perf, tiers, tp=tp, **kw)
+        self.name = f"chiron-tp{tp}"
+
+    reconfigures = True
+    slo_aware_batching = True  # chiron adapts batch sizes to SLOs
+    slo_aware_prefill = True
+
+    def initial_specs(self, sim):
+        n = sim.n_chips // self.tp
+        tiers = [t.name for t in self.tiers.values() if not t.background]
+        self._cooldown = 0
+        return [GroupSpec(tiers[i % len(tiers)], "mixed", self.tp) for i in range(n)]
+
+    def window(self, sim):
+        # hierarchical autoscaling reacts on a slower timescale than the
+        # per-second window (cooldown avoids instance-restart thrash)
+        self._cooldown = getattr(self, "_cooldown", 0) + 1
+        if self._cooldown < 10:
+            return None
+        self._cooldown = 0
+        # backpressure: move one group from the least- to the most-loaded tier
+        load: Dict[str, List[Group]] = {}
+        for g in sim.groups:
+            load.setdefault(g.spec.tier, []).append(g)
+        if len(load) < 2:
+            return None
+        press = {
+            t: sum(g.queue_len for g in gs) / len(gs) for t, gs in load.items()
+        }
+        hot = max(press, key=press.get)
+        cold = min(press, key=press.get)
+        if press[hot] - press[cold] > 4 and len(load[cold]) > 1:
+            specs = []
+            moved = False
+            for g in sim.groups:
+                s = g.spec
+                if not moved and s.tier == cold:
+                    s = replace(s, tier=hot)
+                    moved = True
+                specs.append(s)
+            return specs
+        return None
+
+    def switch_cost_s(self, sim, group):
+        return 2.0  # instance restart / scale-out provisioning
+
+
+class NitsumPolicy(Policy):
+    """The full system: goodput-aware planner + feasibility routing +
+    ms-level TP switching. Ablation flags select the paper's Fig. 12 ladder."""
+
+    reconfigures = True
+    slo_aware_prefill = True
+
+    def __init__(
+        self, perf, tiers, dynamic_tp=True, fast_switch=True, slo_aware=True,
+        window_s=1.0, **kw,
+    ):
+        super().__init__(perf, tiers, **kw)
+        self.dynamic_tp = dynamic_tp
+        self.fast_switch = fast_switch
+        self.slo_aware = slo_aware
+        self.planner = Planner(perf, tiers, candidate_tps=self.tps)
+        self.mig = MigrationModel()
+        self.name = "nitsum" + ("" if fast_switch else "-slowswitch")
+        self.gs: Optional[GlobalScheduler] = None
+
+    def _mk_plan(self, sim) -> List[GroupSpec]:
+        demands = {}
+        for t in self.tiers.values():
+            if t.background:
+                continue
+            d = sim.tier_stats(t.name)
+            if d.rps > 0:
+                # burst headroom: plan for 1.2x the observed window rate
+                demands[t.name] = TierDemand(d.rps * 1.2, d.prompt_len, d.output_len)
+        tp0 = self.perf.min_tp(self.tps)
+        if not demands:
+            return [GroupSpec(None, "mixed", tp0)] * (sim.n_chips // tp0)
+        plan = self.planner.plan(PlannerInputs(demands, sim.n_chips))
+        sim.last_planning_ms = plan.planning_ms
+        specs: List[GroupSpec] = []
+        for tier, tp in plan.tiers.items():
+            if tp.mixed is not None:
+                specs += [GroupSpec(tier, "mixed", tp.mixed.tp)] * int(
+                    tp.mixed.chips // tp.mixed.tp
+                )
+                continue
+            specs += [GroupSpec(tier, "prefill", tp.prefill.tp)] * int(
+                tp.prefill.chips // tp.prefill.tp
+            )
+            specs += [GroupSpec(tier, "decode", tp.decode.tp)] * int(
+                tp.decode.chips // tp.decode.tp
+            )
+        # leftover chips: shared mixed groups at the smallest feasible TP —
+        # this is where spilled best-effort and background work lands
+        used = sum(s.tp for s in specs)
+        left = sim.n_chips - used
+        specs += [GroupSpec(None, "mixed", tp0)] * (left // tp0)
+        return specs
+
+    def _mk_plan_with_shared(self, sim) -> List[GroupSpec]:
+        """Planner output vs uniform shared mixed pools: take the best by
+        the same estimate. The shared pool wins when tiers' SLO-optimal TPs
+        coincide (loose SLOs / uniform load) — it is the paper's 'in stable
+        settings a fixed configuration may suffice' case, and including it
+        makes Nitsum's config space a superset of every static baseline."""
+        cands = [self._mk_plan(sim)]
+        for tp in self.tps:
+            if self.perf.fits(tp) and sim.n_chips // tp >= 1:
+                cands.append([GroupSpec(None, "mixed", tp)] * (sim.n_chips // tp))
+        return max(cands, key=lambda s: self.estimate_specs(sim, s))
+
+    def initial_specs(self, sim):
+        self._cur_specs = self._mk_plan_with_shared(sim)
+        return self._cur_specs
+
+    def window(self, sim):
+        if not self.dynamic_tp:
+            return None
+        # sustained-signal hysteresis: in-flight prefills restart on a group
+        # rebuild, so a switch must be justified by a >15% estimated gain in
+        # THREE consecutive windows — transient demand noise never switches,
+        # real mix shifts switch within ~3 s (well inside the paper's
+        # 0.5-1 s x burst-length envelope)
+        new = self._mk_plan_with_shared(sim)
+        cur = getattr(self, "_cur_specs", None)
+        if cur is None:
+            self._cur_specs = new
+            return new
+        gain = self.estimate_specs(sim, new) > 1.15 * self.estimate_specs(sim, cur)
+        self._gain_streak = getattr(self, "_gain_streak", 0) + 1 if gain else 0
+        if self._gain_streak < 3:
+            return None
+        self._gain_streak = 0
+        self._cur_specs = new
+        return new
+
+    def switch_cost_s(self, sim, group: Group) -> float:
+        # KV bytes resident on the group that must migrate
+        kv_bytes = sum(
+            self.perf.kv_bytes_per_token() * r.ctx + self.perf.state_bytes()
+            for r in group.decoding
+        )
+        if self.fast_switch:
+            return self.mig.pipelined_s(max(kv_bytes, 1.0))
+        # straw-man: full weight reload (~1 GB/s from host) + per-page copies
+        reload_s = self.perf.n_params * 2 / 1e9
+        return reload_s + self.mig.naive_per_page_s(max(kv_bytes, 1.0))
+
+    def _sync_scheduler(self, sim) -> None:
+        handles = []
+        for g in sim.groups:
+            tier = g.spec.tier
+            t = self.tiers.get(tier) if tier else None
+            d = sim.tier_stats(tier) if tier else sim.tier_stats(None)
+            max_rps = (
+                self.perf.max_prefill_rps(d.prompt_len, g.spec.tp, t.ttft_ms)
+                if t is not None
+                else self.perf.max_prefill_rps(d.prompt_len, g.spec.tp, 10_000.0)
+            )
+            h = GroupHandle(
+                g.gid, tier, g.spec.stage, g.spec.tp, max_rps,
+                queue_len=g.queue_len,
+            )
+            handles.append(h)
+        if self.gs is None:
+            self.gs = GlobalScheduler(handles)
+        else:
+            self.gs.replace_groups(handles)
+
+    def route(self, sim, req: SimReq) -> Group:
+        if not self.slo_aware:
+            return super().route(sim, req)
+        self._sync_scheduler(sim)
+        rate_cost = 1.0
+        h, feasible = self.gs.dispatch(req.tr.tier, rate_cost, req.background)
+        req.feasible = feasible
+        req.rate_cost = rate_cost
+        req.dispatch_gid = h.gid
+        return sim.group_by_id(h.gid)
+
+
+class OraclePolicy(Policy):
+    """Per-window best static configuration (uniform mixed / disaggregated /
+    tier-partitioned), zero switch cost — the paper's Fig. 3 'Optimal'
+    upper bound."""
+
+    name = "oracle"
+    reconfigures = True
+    slo_aware_prefill = True
+
+    def _best(self, sim) -> List[GroupSpec]:
+        """Rank candidate static layouts (uniform mixed / tier-partitioned,
+        per TP level) with the SAME estimator the hysteresis uses — two
+        disagreeing estimators made the oracle flip configs at saturation,
+        restarting in-flight prefills every window."""
+        tier_names = [t.name for t in self.tiers.values() if not t.background]
+        cands = []
+        for tp in self.tps:
+            n = sim.n_chips // tp
+            if n < 1 or not self.perf.fits(tp):
+                continue
+            cands.append([GroupSpec(None, "mixed", tp)] * n)
+            if n >= len(tier_names):
+                cands.append([
+                    GroupSpec(tier_names[i % len(tier_names)], "mixed", tp)
+                    for i in range(n)
+                ])
+        if not cands:
+            tp0 = self.perf.min_tp(self.tps)
+            return [GroupSpec(None, "mixed", tp0)] * (sim.n_chips // tp0)
+        return max(cands, key=lambda s: self.estimate_specs(sim, s))
+
+    def initial_specs(self, sim):
+        self._cur = self._best(sim)
+        return self._cur
+
+    def window(self, sim):
+        new = self._best(sim)
+        cur = getattr(self, "_cur", None)
+        if cur is not None:
+            # hysteresis: even a zero-cost switch restarts in-flight prefills
+            if self.estimate_specs(sim, new) < 1.10 * self.estimate_specs(sim, cur):
+                return None
+        self._cur = new
+        return new
+
+
+# ===========================================================================
+# Simulator
+# ===========================================================================
+class Simulator:
+    def __init__(
+        self,
+        perf: PerfModel,
+        tiers: Sequence[SLOTier],
+        n_chips: int,
+        policy: Policy,
+        dt: float = 0.02,
+        window_s: float = 1.0,
+        monitor_window_s: float = 10.0,
+    ):
+        self.perf = perf
+        self.tiers = {t.name: t for t in tiers}
+        self.n_chips = n_chips
+        self.policy = policy
+        self.dt = dt
+        self.window_s = window_s
+        self.monitor_window_s = monitor_window_s
+        self.now = 0.0
+        self.groups: List[Group] = []
+        self._gid = 0
+        self.meter = GoodputMeter(self.tiers)
+        self.finished: List[SimReq] = []
+        self.recent: deque = deque()  # (arrival_s, tier, plen, olen)
+        self.timeline: List[Tuple[float, float]] = []  # (t, goodput in window)
+        self._win_good = 0
+        self.last_planning_ms = 0.0
+        self.reconfig_count = 0
+        self._tier_defaults: Dict[str, TierDemand] = {}
+
+    # ---- bookkeeping ---------------------------------------------------
+    def group_by_id(self, gid: int) -> Group:
+        for g in self.groups:
+            if g.gid == gid:
+                return g
+        return self.groups[0]
+
+    def tier_stats(self, tier: Optional[str]) -> TierDemand:
+        rec = [r for r in self.recent if tier is None or r[1] == tier]
+        if not rec:
+            return self._tier_defaults.get(
+                tier, TierDemand(rps=0.0, prompt_len=1024, output_len=128)
+            )
+        span = max(self.monitor_window_s, 1e-6)
+        return TierDemand(
+            rps=len(rec) / span,
+            prompt_len=int(np.mean([r[2] for r in rec])),
+            output_len=int(np.mean([r[3] for r in rec])),
+        )
+
+    def _apply_specs(self, specs: List[GroupSpec], charge_cost: bool) -> None:
+        old = self.groups
+        key = lambda s: (s.tier or "", s.stage, s.tp)
+        if old and sorted(specs, key=key) == sorted((g.spec for g in old), key=key):
+            return  # hysteresis: same multiset of groups, no reconfiguration
+        self.reconfig_count += bool(old)
+        # keep groups whose spec survives; rebuild the rest
+        new_groups: List[Group] = []
+        pool = list(old)
+        for spec in specs:
+            match = next((g for g in pool if g.spec == spec), None)
+            if match is not None:
+                pool.remove(match)
+                new_groups.append(match)
+            else:
+                g = Group(self._gid, spec, self)
+                self._gid += 1
+                if charge_cost and old:
+                    g.blocked_until = self.now + self.policy.switch_cost_s(self, g)
+                new_groups.append(g)
+        # redistribute requests from dissolved groups
+        orphans: List[SimReq] = []
+        for g in pool:
+            cost = self.policy.switch_cost_s(self, g) if charge_cost else 0.0
+            for r in g.clear():
+                r._penalty = cost  # noqa: attached transient
+                orphans.append(r)
+        self.groups = new_groups
+        for r in orphans:
+            if r.tokens > 0 or r.first_token_s is not None:
+                tgt = self.policy.decode_target(self, r, self.groups[0])
+                tgt.decoding.append(r)
+                tgt.blocked_until = max(
+                    tgt.blocked_until, self.now + getattr(r, "_penalty", 0.0)
+                )
+            else:
+                tgt = self.policy.route(self, r)
+                tgt.prefill_q.append(r)
+            r.group = tgt
+
+    # ---- event hooks -----------------------------------------------------
+    def on_prefill_done(self, req: SimReq, group: Group, t: float) -> None:
+        req.first_token_s = t
+        req.tokens = 1.0
+        if isinstance(self.policy, NitsumPolicy) and req.dispatch_gid is not None:
+            if self.policy.gs is not None:
+                self.policy.gs.complete(req.dispatch_gid, req.rate_cost)
+        if req.tr.output_len <= 1:
+            req.finish_s = t
+            self.on_finish(req)
+            return
+        tgt = self.policy.decode_target(self, req, group)
+        tgt.decoding.append(req)
+        req.group = tgt
+
+    def on_finish(self, req: SimReq) -> None:
+        self.finished.append(req)
+        rec = RequestRecord(
+            req.tr.req_id, req.tr.tier, req.tr.arrival_s, req.tr.prompt_len,
+            req.tr.output_len, req.first_token_s, req.finish_s,
+            int(req.tr.output_len),
+        )
+        self.meter.add(rec)
+        if self.meter.meets_slo(rec):
+            self._win_good += 1
+
+    # ---- main loop --------------------------------------------------------
+    def run(self, workload: Workload, drain_s: float = 60.0) -> GoodputMeter:
+        for t in self.tiers.values():
+            sub = [r for r in workload.requests if r.tier == t.name]
+            if sub:
+                self._tier_defaults[t.name] = TierDemand(
+                    rps=len(sub) / workload.horizon_s,
+                    prompt_len=int(np.mean([r.prompt_len for r in sub])),
+                    output_len=int(np.mean([r.output_len for r in sub])),
+                )
+        self._tier_defaults[None] = TierDemand(
+            rps=workload.rps,
+            prompt_len=int(np.mean([r.prompt_len for r in workload.requests])),
+            output_len=int(np.mean([r.output_len for r in workload.requests])),
+        )
+        self._apply_specs(self.policy.initial_specs(self), charge_cost=False)
+        arrivals = deque(workload.requests)
+        horizon = workload.horizon_s + drain_s
+        next_window = self.window_s
+        next_second = 1.0
+        while self.now < horizon:
+            while arrivals and arrivals[0].arrival_s <= self.now:
+                tr = arrivals.popleft()
+                self.recent.append((tr.arrival_s, tr.tier, tr.prompt_len, tr.output_len))
+                tier = self.tiers.get(tr.tier)
+                req = SimReq(tr, background=bool(tier and tier.background))
+                g = self.policy.route(self, req)
+                g.prefill_q.append(req)
+                req.group = g
+            while self.recent and self.recent[0][0] < self.now - self.monitor_window_s:
+                self.recent.popleft()
+            for g in self.groups:
+                g.tick(self.now, self.dt)
+            self.now += self.dt
+            if self.now >= next_second:
+                self.timeline.append((self.now, self._win_good / 1.0))
+                self._win_good = 0
+                next_second += 1.0
+            if self.now >= next_window:
+                specs = self.policy.window(self)
+                if specs is not None:
+                    self._apply_specs(specs, charge_cost=True)
+                next_window += self.window_s
+        return self.meter
+
+    def goodput(self, workload: Workload) -> float:
+        return self.meter.goodput(workload.horizon_s)
+
+
+def run_system(
+    system: str,
+    perf: PerfModel,
+    tiers: Sequence[SLOTier],
+    n_chips: int,
+    workload: Workload,
+    candidate_tps=(1, 2, 4, 8),
+    **policy_kw,
+):
+    tps = [t for t in candidate_tps if t <= n_chips]
+    # static baselines run at the minimal TP the model fits (paper's setup)
+    tp0 = perf.min_tp(tps)
+    mk = {
+        "nitsum": lambda: NitsumPolicy(perf, tiers, candidate_tps=tps, **policy_kw),
+        "nitsum-slowswitch": lambda: NitsumPolicy(
+            perf, tiers, fast_switch=False, candidate_tps=tps, **policy_kw
+        ),
+        "sglang": lambda: StaticPolicy(perf, tiers, tp=tp0, candidate_tps=tps),
+        "sglang-pd": lambda: StaticPolicy(
+            perf, tiers, tp=tp0, disaggregated=True, candidate_tps=tps
+        ),
+        "sglang-slo": lambda: SLOStaticPolicy(perf, tiers, candidate_tps=tps),
+        "split": lambda: SplitPolicy(perf, tiers, candidate_tps=tps),
+        "llumnix": lambda: LlumnixPolicy(perf, tiers, tp=tp0, candidate_tps=tps),
+        "chiron": lambda: ChironPolicy(perf, tiers, tp=tp0, candidate_tps=tps),
+        "oracle": lambda: OraclePolicy(perf, tiers, candidate_tps=tps),
+    }
+    if system.startswith("static-tp"):
+        tp = int(system.split("static-tp")[1].split("-")[0])
+        disagg = system.endswith("-pd")
+        policy = StaticPolicy(perf, tiers, tp=tp, disaggregated=disagg, candidate_tps=tps)
+    else:
+        policy = mk[system]()
+    sim = Simulator(perf, tiers, n_chips, policy)
+    meter = sim.run(workload)
+    return sim, meter
+
+
+Simulator.decode_cap = lambda self, spec: self.policy.decode_cap(self, spec)

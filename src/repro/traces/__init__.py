@@ -1,0 +1,11 @@
+from repro.traces.workload import TraceRequest, Workload, merge_workloads
+from repro.traces.servegen import servegen_workload
+from repro.traces.azure import azure_workload
+
+__all__ = [
+    "TraceRequest",
+    "Workload",
+    "merge_workloads",
+    "servegen_workload",
+    "azure_workload",
+]

@@ -1,0 +1,76 @@
+"""ServeGen-calibrated workloads (Alibaba Cloud Model Studio, arXiv/NSDI'26).
+
+Published statistics reproduced (paper §4 Workloads):
+  conversation: avg prompt 871, avg output 86, avg 10.66 req/s
+  code:         avg prompt 912, avg output 148, avg 11.94 req/s
+10-minute normalized windows, strongly bursty.
+"""
+from __future__ import annotations
+
+from repro.traces.workload import Workload, make_workload, merge_workloads
+
+STATS = {
+    "conversation": dict(prompt_mean=871, output_mean=86, mean_rps=10.66),
+    "code": dict(prompt_mean=912, output_mean=148, mean_rps=11.94),
+}
+
+
+def servegen_workload(
+    kind: str = "conversation",
+    tier: str = "strict",
+    horizon_s: float = 600.0,
+    seed: int = 0,
+    rps: float = None,
+) -> Workload:
+    s = dict(STATS[kind])
+    if rps is not None:
+        s["mean_rps"] = rps
+    return make_workload(
+        f"servegen-{kind}", tier, s["mean_rps"], s["prompt_mean"],
+        s["output_mean"], horizon_s, seed, burstiness=0.7,
+    )
+
+
+def servegen_two_tier(horizon_s: float = 600.0, seed: int = 0, rps_scale: float = 1.0) -> Workload:
+    """The paper's two-tier setting: conversation = strict, code = relaxed."""
+    conv = servegen_workload(
+        "conversation", "strict", horizon_s, seed,
+        rps=STATS["conversation"]["mean_rps"] * rps_scale,
+    )
+    code = servegen_workload(
+        "code", "relaxed", horizon_s, seed + 1,
+        rps=STATS["code"]["mean_rps"] * rps_scale,
+    )
+    return merge_workloads("servegen-2tier", conv, code)
+
+
+def servegen_shifting(
+    horizon_s: float = 600.0, seed: int = 0, rps_scale: float = 1.0,
+    n_phases: int = 4,
+) -> Workload:
+    """Time-varying tier mix (the paper's §2.3 motivation): the workload
+    alternates between strict-heavy and relaxed-heavy phases, so the
+    goodput-optimal configuration shifts during the trace."""
+    from repro.traces.workload import TraceRequest
+
+    phase_s = horizon_s / n_phases
+    parts = []
+    for ph in range(n_phases):
+        heavy_strict = ph % 2 == 0
+        conv = servegen_workload(
+            "conversation", "strict", phase_s, seed + 2 * ph,
+            rps=STATS["conversation"]["mean_rps"] * rps_scale * (1.7 if heavy_strict else 0.3),
+        )
+        code = servegen_workload(
+            "code", "relaxed", phase_s, seed + 2 * ph + 1,
+            rps=STATS["code"]["mean_rps"] * rps_scale * (0.3 if heavy_strict else 1.7),
+        )
+        for w in (conv, code):
+            parts.append(
+                Workload(w.name, [
+                    TraceRequest(r.req_id, r.tier, r.arrival_s + ph * phase_s,
+                                 r.prompt_len, r.output_len)
+                    for r in w.requests
+                ], horizon_s)
+            )
+    return merge_workloads("servegen-shifting", *parts)

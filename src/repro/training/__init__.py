@@ -1,0 +1,14 @@
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update, zero1_shardings
+from repro.training.train_step import make_train_step, TrainStepConfig
+from repro.training.data import synthetic_batch, SyntheticDataset
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "zero1_shardings",
+    "make_train_step",
+    "TrainStepConfig",
+    "synthetic_batch",
+    "SyntheticDataset",
+]

@@ -1,0 +1,66 @@
+"""Gradient compression for the DP all-reduce (distributed-optimization trick).
+
+int8 block-quantization with error feedback: each leaf is quantized per
+block of 2048 with a per-block absmax scale; the quantization residual is
+carried in an error-feedback buffer so compression bias vanishes over steps
+(1-bit-Adam-style convergence argument).
+
+On a real multi-pod deployment the int8 representation is what crosses the
+(slow, inter-pod DCN) links: the train step would shard_map the gradient
+sync and psum the int8-decoded blocks hierarchically (reduce-scatter
+intra-pod in bf16, all-reduce inter-pod in int8). On this CPU container we
+apply the same quantize/dequantize transform in-graph — identical numerics,
+no wire — and validate the convergence property in tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class CompressConfig:
+    enabled: bool = False
+    block: int = 2048
+    bits: int = 8
+
+
+def _quantize_leaf(g, err, block: int):
+    flat = g.astype(jnp.float32).reshape(-1)
+    if err is not None:
+        flat = flat + err.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    fp = jnp.pad(flat, (0, pad)).reshape(-1, block)
+    scale = jnp.max(jnp.abs(fp), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(fp / scale), -127, 127).astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+    new_err = (flat - deq).astype(jnp.float32)
+    return deq.reshape(g.shape).astype(g.dtype), new_err.reshape(g.shape)
+
+
+def init_error_feedback(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+
+
+def compress_grads(grads, err_state, cfg: CompressConfig):
+    """Returns (decompressed grads as they would arrive post-allreduce,
+    new error-feedback state)."""
+    if not cfg.enabled:
+        return grads, err_state
+    out = jax.tree_util.tree_map(
+        lambda g, e: _quantize_leaf(g, e, cfg.block), grads, err_state
+    )
+    deq = jax.tree_util.tree_map(
+        lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    err = jax.tree_util.tree_map(
+        lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    return deq, err

@@ -1,0 +1,133 @@
+"""Jitted train step: loss -> grads -> (compression) -> clip -> AdamW.
+
+Built once per (arch, mesh, rules); the same function is what the multi-pod
+dry-run lowers for the `train_4k` shapes. Remat happens inside the model's
+period scan (models/model.py); ZeRO-1 sharding of the optimizer state comes
+from out_shardings on the state tree.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import loss_fn, model_param_defs
+from repro.models.params import param_shardings
+from repro.parallel.sharding import ExecConfig, ShardingRules, pspec_for
+from repro.training.grad_compress import CompressConfig, compress_grads
+from repro.training.optimizer import (
+    AdamWConfig,
+    adamw_update,
+    clip_by_global_norm,
+    zero1_shardings,
+)
+
+
+@dataclass(frozen=True)
+class TrainStepConfig:
+    opt: AdamWConfig = field(default_factory=AdamWConfig)
+    compress: CompressConfig = field(default_factory=CompressConfig)
+    seq_chunk: int = 512
+    block_q: int = 512
+    block_k: int = 512
+    # gradient accumulation: split the global batch into k microbatches
+    # (scan) — bounds remat-saved residual memory by 1/k at the cost of one
+    # extra f32 grad accumulator
+    accum_steps: int = 1
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    ec: ExecConfig,
+    rules: ShardingRules,
+    mesh,
+    tcfg: TrainStepConfig = TrainStepConfig(),
+):
+    """Returns (step_fn, shardings) — step_fn(params, opt_state, batch)."""
+
+    def loss_and_grads(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(
+                p, cfg, ec, batch, rules=rules, mesh=mesh,
+                seq_chunk=tcfg.seq_chunk, block_q=tcfg.block_q,
+                block_k=tcfg.block_k,
+            ),
+            has_aux=True,
+        )(params)
+
+    def step(params, opt_state, batch):
+        k = tcfg.accum_steps
+        if k <= 1:
+            (loss, metrics), grads = loss_and_grads(params, batch)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch
+            )
+
+            def micro_step(acc, mb):
+                (l, met), g = loss_and_grads(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, gi: a + gi.astype(jnp.float32) / k, acc, g
+                )
+                return acc, (l, met)
+
+            acc0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            grads, (losses, mets) = jax.lax.scan(micro_step, acc0, micro)
+            loss = losses.mean()
+            metrics = jax.tree_util.tree_map(lambda m: m.mean(), mets)
+        err = opt_state.get("err")
+        if tcfg.compress.enabled:
+            grads, err = compress_grads(grads, err, tcfg.compress)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.opt.grad_clip)
+        inner = {k: opt_state[k] for k in ("mu", "nu", "count")}
+        params, inner = adamw_update(grads, inner, params, tcfg.opt)
+        new_state = dict(inner)
+        if err is not None:
+            new_state["err"] = err
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = gnorm
+        return params, new_state, metrics
+
+    shardings = None
+    if mesh is not None:
+        defs = model_param_defs(cfg, ec)
+        p_sh = param_shardings(defs, rules, mesh)
+        o_sh = zero1_shardings(defs, rules, mesh)
+        if tcfg.compress.enabled:
+            o_sh = dict(o_sh)
+            o_sh["err"] = o_sh["mu"]
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        b_spec = pspec_for(("batch", "seq"), rules, mesh)
+        b_sh = NamedSharding(mesh, b_spec)
+        batch_sh = {"tokens": b_sh, "targets": b_sh}
+        if cfg.frontend == "encodec":  # stubbed frame-embedding inputs
+            batch_sh["embeds"] = NamedSharding(
+                mesh, pspec_for(("batch", "seq", "embed"), rules, mesh)
+            )
+        shardings = dict(params=p_sh, opt_state=o_sh, batch=batch_sh)
+        step = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, batch_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1),
+        )
+    else:
+        step = jax.jit(step, donate_argnums=(0, 1))
+    return step, shardings
+
+
+def init_opt_state(params, tcfg: TrainStepConfig):
+    from repro.training.optimizer import adamw_init
+    from repro.training.grad_compress import init_error_feedback
+
+    state = adamw_init(params, tcfg.opt.dtype)
+    if tcfg.compress.enabled:
+        state["err"] = init_error_feedback(params)
+    return state

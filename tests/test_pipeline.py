@@ -1,0 +1,45 @@
+"""Pipeline parallelism: pipelined stack == sequential stack (subprocess,
+needs its own device count)."""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CHECK = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from repro.parallel.pipeline import make_pipe_mesh, pipeline_apply
+
+L, D = 8, 32
+n_micro, Bm, S = 4, 2, 8
+key = jax.random.PRNGKey(0)
+params = {"w": jax.random.normal(key, (L, D, D)) * 0.3}
+h0 = jax.random.normal(jax.random.PRNGKey(1), (n_micro, Bm, S, D))
+
+def body(h, p, k):
+    return jnp.tanh(h @ p["w"])
+
+# sequential reference
+ref = h0
+for i in range(L):
+    ref = jnp.tanh(ref @ params["w"][i])
+
+mesh = make_pipe_mesh(jax.devices(), n_stages=4, tp=1)
+out = pipeline_apply(body, params, h0, mesh, n_periods=L)
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+print("OK pipeline")
+"""
+
+
+def test_pipeline_matches_sequential():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", CHECK], capture_output=True, text=True, env=env,
+        timeout=600,
+    )
+    assert out.returncode == 0, f"{out.stdout}\n{out.stderr}"
+    assert "OK pipeline" in out.stdout

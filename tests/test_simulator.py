@@ -1,0 +1,108 @@
+"""Simulator + scheduler + trace behaviour tests."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.profiles.perf_model import PerfModel
+from repro.profiles.slo import derive_tiers
+from repro.serving.global_scheduler import GlobalScheduler, GroupHandle
+from repro.serving.local_scheduler import LocalScheduler
+from repro.serving.simulator import run_system
+from repro.traces.servegen import servegen_two_tier, servegen_workload
+from repro.traces.azure import azure_two_tier
+
+
+@pytest.fixture(scope="module")
+def perf():
+    return PerfModel(get_config("llama3-8b"))
+
+
+@pytest.fixture(scope="module")
+def tiers(perf):
+    return derive_tiers(perf, prompt_len=900, ctx_len=1000)
+
+
+def test_trace_stats_match_published(perf):
+    wl = servegen_workload("conversation", horizon_s=600, seed=0)
+    s = wl.stats()
+    assert abs(s["rps"] - 10.66) / 10.66 < 0.25
+    assert abs(s["prompt_mean"] - 871) / 871 < 0.2
+    wl = azure_two_tier(horizon_s=600)
+    assert abs(wl.rps - 2.8) / 2.8 < 0.3
+
+
+def test_global_scheduler_feasibility_and_spill():
+    gs = GlobalScheduler([
+        GroupHandle(0, "strict", "prefill", 2, max_rps=2.0),
+        GroupHandle(1, "relaxed", "prefill", 2, max_rps=2.0),
+    ])
+    g, feas = gs.dispatch("strict", 1.0)
+    assert feas and g.gid == 0
+    g, feas = gs.dispatch("strict", 1.0)
+    assert feas
+    g, feas = gs.dispatch("strict", 1.0)  # over bandwidth -> spill
+    assert not feas
+    gs.complete(0, 1.0)
+    g, feas = gs.dispatch("strict", 1.0)
+    assert feas
+
+
+def test_local_scheduler_priority_order():
+    ls = LocalScheduler(batch_cap=4)
+    ls.enqueue("bg", background=True)
+    ls.enqueue("be", feasible=False)
+    ls.enqueue("f1")
+    ls.enqueue("f2")
+    batch = ls.form_batch(running=["r0"])
+    assert batch == ["r0", "f1", "f2", "be"]
+
+
+@pytest.mark.slow
+def test_nitsum_beats_static_under_high_load(perf, tiers):
+    wl = servegen_two_tier(horizon_s=90.0, rps_scale=2.0)
+    _, m_nit = run_system("nitsum", perf, tiers, 16, wl)
+    _, m_sgl = run_system("sglang", perf, tiers, 16, wl)
+    g_nit = m_nit.goodput(wl.horizon_s)
+    g_sgl = m_sgl.goodput(wl.horizon_s)
+    assert g_nit > 1.5 * g_sgl, (g_nit, g_sgl)
+
+
+@pytest.mark.slow
+def test_slow_switch_ablation_collapses(perf, tiers):
+    """Paper Fig. 12: dynamic TP with naive switching is worse than not
+    switching at all — fast switching is what makes dynamic TP viable."""
+    wl = servegen_two_tier(horizon_s=60.0, rps_scale=1.5)
+    sim_f, m_fast = run_system("nitsum", perf, tiers, 16, wl)
+    sim_s, m_slow = run_system("nitsum-slowswitch", perf, tiers, 16, wl)
+    g_fast = m_fast.goodput(wl.horizon_s)
+    g_slow = m_slow.goodput(wl.horizon_s)
+    if sim_s.reconfig_count > 0:
+        assert g_fast >= g_slow
+
+
+@pytest.mark.slow
+def test_goodput_saturates_not_collapses(perf, tiers):
+    """Nitsum's goodput must be non-collapsing as injected RPS grows."""
+    g = []
+    for scale in (0.5, 1.5, 2.5):
+        wl = servegen_two_tier(horizon_s=60.0, rps_scale=scale)
+        _, meter = run_system("nitsum", perf, tiers, 16, wl)
+        g.append(meter.goodput(wl.horizon_s))
+    assert g[1] > 0.5 * g[0] and g[2] > 0.5 * g[1], g
+
+
+def test_planner_scales_to_128_chips(perf, tiers):
+    """Paper §4.2.3: planning cost stays ms-level at large scale."""
+    from repro.core.planner import Planner, PlannerInputs, TierDemand
+
+    pl = Planner(perf, tiers, candidate_tps=(2, 4, 8))
+    inputs = PlannerInputs(
+        demands={
+            "strict": TierDemand(rps=200.0, prompt_len=1024, output_len=128),
+            "relaxed": TierDemand(rps=300.0, prompt_len=2048, output_len=64),
+        },
+        total_chips=128,
+    )
+    plan = pl.plan(inputs)
+    assert plan.planning_ms < 100.0
+    assert plan.chips_used() <= 128
