@@ -1,3 +1,11 @@
+"""VENDORED SEED BASELINE — do not modify.
+
+Verbatim snapshot of src/repro/profiles/perf_model.py at the seed commit
+(ff4699c): the uncached, unmemoized analytic model whose 40-step bisections
+and per-call param_count() walks the seed fluid-tick loop paid on every
+query. benchmarks/sim_throughput.py instantiates this for the baseline leg.
+"""
+from __future__ import annotations
 """Analytic TPU performance model — the planner's "offline profiles".
 
 The paper assumes admins profile each GPU type offline (its Fig. 2). We run on
@@ -16,109 +24,12 @@ benefit is a GPU L2 effect. The TPU analogues modeled here:
       models, which *increases* normalized throughput exactly like the
       paper's L2 effect.
 """
-from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from functools import lru_cache
 from typing import Optional
 
 from repro.configs.base import ModelConfig
-
-# ---------------------------------------------------------------------------
-# Query memoization (docs/simulator.md §Cache-key quantization)
-#
-# The planner re-runs the same SLO-throughput queries verbatim inside its
-# itertools.product inner loop every control window, and the simulator's hot
-# path asks for decode step times whose only drifting input is the batch's
-# mean context length. All four expensive queries are memoized behind LRU
-# caches; float length inputs are snapped to a geometric grid with relative
-# spacing LEN_QUANT_REL so that slowly-drifting inputs (window-mean prompt
-# lengths, growing decode contexts) hit the same cache line. The induced
-# input error is <= LEN_QUANT_REL/2 per length; every model output below is
-# at most ~linear in each length input, so the output error is bounded by
-# ~LEN_QUANT_REL — well inside the simulator's 2% equivalence budget.
-# ---------------------------------------------------------------------------
-LEN_QUANT_REL = 0.002
-_LN_Q = math.log1p(LEN_QUANT_REL)
-
-
-@lru_cache(maxsize=1 << 14)
-def quantize_len(x: float) -> float:
-    """Snap a (prompt/context/output) length to a LEN_QUANT_REL-relative grid.
-
-    Memoized: the hot callers re-quantize the same slowly-drifting floats
-    (window-mean lengths) many times per simulated second."""
-    if x <= 16.0:
-        return float(max(round(x), 0))
-    return math.exp(round(math.log(x) / _LN_Q) * _LN_Q)
-
-
-@lru_cache(maxsize=1 << 17)
-def _prefill_time_cached(pm: "PerfModel", prompt_len: float, tp: int, batch: int) -> float:
-    return pm._prefill_time_raw(prompt_len, tp, batch)
-
-
-@lru_cache(maxsize=1 << 14)
-def _decode_affine_cached(pm: "PerfModel", batch: int, tp: int):
-    return pm._decode_affine_raw(batch, tp)
-
-
-@lru_cache(maxsize=1 << 16)
-def _max_prefill_rps_cached(
-    pm: "PerfModel", prompt_len: float, tp: int, ttft_slo_ms: float
-) -> float:
-    return pm._max_prefill_rps_raw(prompt_len, tp, ttft_slo_ms)
-
-
-@lru_cache(maxsize=1 << 16)
-def _max_decode_batch_cached(
-    pm: "PerfModel", ctx_len: float, tp: int, tpot_slo_ms: float
-) -> int:
-    return pm._max_decode_batch_raw(ctx_len, tp, tpot_slo_ms)
-
-
-_CACHING_ENABLED = True
-
-
-class perf_caches_disabled:
-    """Context manager: bypass memoization AND input quantization so every
-    query runs the raw roofline math on exact inputs. For experiments that
-    need quantization-free numbers from the live model (the speedup
-    benchmark instead uses the vendored seed snapshot in
-    benchmarks/baselines/ as its baseline)."""
-
-    def __enter__(self):
-        global _CACHING_ENABLED
-        self._prev = _CACHING_ENABLED
-        _CACHING_ENABLED = False
-        return self
-
-    def __exit__(self, *exc):
-        global _CACHING_ENABLED
-        _CACHING_ENABLED = self._prev
-        return False
-
-
-def clear_perf_caches() -> None:
-    """Drop all memoized perf-model queries (cold-cache benchmarking)."""
-    for f in (
-        quantize_len,
-        _prefill_time_cached,
-        _decode_affine_cached,
-        _max_prefill_rps_cached,
-        _max_decode_batch_cached,
-    ):
-        f.cache_clear()
-
-
-def perf_cache_info() -> dict:
-    return {
-        "prefill_time": _prefill_time_cached.cache_info()._asdict(),
-        "decode_step": _decode_affine_cached.cache_info()._asdict(),
-        "max_prefill_rps": _max_prefill_rps_cached.cache_info()._asdict(),
-        "max_decode_batch": _max_decode_batch_cached.cache_info()._asdict(),
-    }
 
 
 @dataclass(frozen=True)
@@ -144,46 +55,24 @@ class PerfModel:
     hw: HardwareSpec = V5E
     dtype_bytes: int = 2
 
-    def __post_init__(self):
-        # The memoized queries hash `self` on every lookup; the generated
-        # dataclass __hash__ walks the whole nested ModelConfig each time
-        # (~5us), which would dominate warm cache hits. Precompute it once,
-        # along with the model-derived constants the raw queries re-derive.
-        object.__setattr__(
-            self, "_hash", hash((self.cfg, self.hw, self.dtype_bytes))
-        )
-        object.__setattr__(self, "_n_params", self.cfg.param_count())
-        object.__setattr__(self, "_n_active", self.cfg.active_param_count())
-        object.__setattr__(self, "_kv_per_tok", self._kv_bytes_per_token())
-        object.__setattr__(self, "_state_bytes", self._state_bytes_raw())
-
-    def __hash__(self) -> int:  # overrides the generated field-walking hash
-        return self._hash
-
     # ---- derived model quantities ------------------------------------
     @property
     def n_params(self) -> int:
-        return self._n_params
+        return self.cfg.param_count()
 
     @property
     def n_active(self) -> int:
-        return self._n_active
+        return self.cfg.active_param_count()
 
     def kv_bytes_per_token(self) -> float:
-        return self._kv_per_tok
-
-    def state_bytes(self) -> float:
-        """O(1) recurrent state (mamba) per sequence."""
-        return self._state_bytes
-
-    def _kv_bytes_per_token(self) -> float:
         c = self.cfg
         if c.family == "ssm":
             return 0.0  # state is O(1) in sequence length
         per_layer = 2 * c.num_kv_heads * c.head_dim * self.dtype_bytes
         return per_layer * c.n_attn_layers
 
-    def _state_bytes_raw(self) -> float:
+    def state_bytes(self) -> float:
+        """O(1) recurrent state (mamba) per sequence."""
         c = self.cfg
         if c.mamba is None:
             return 0.0
@@ -203,14 +92,7 @@ class PerfModel:
 
     # ---- prefill -------------------------------------------------------
     def prefill_time_s(self, prompt_len: int, tp: int, batch: int = 1) -> float:
-        """Time to prefill `batch` prompts of `prompt_len` on a TP-`tp` group.
-
-        Memoized on a quantized prompt length (see module header)."""
-        if not _CACHING_ENABLED:
-            return self._prefill_time_raw(prompt_len, tp, batch)
-        return _prefill_time_cached(self, quantize_len(prompt_len), tp, batch)
-
-    def _prefill_time_raw(self, prompt_len: float, tp: int, batch: int = 1) -> float:
+        """Time to prefill `batch` prompts of `prompt_len` on a TP-`tp` group."""
         tokens = prompt_len * batch
         flops = 2.0 * self.n_active * tokens
         # attention quadratic term
@@ -234,41 +116,7 @@ class PerfModel:
 
     # ---- decode --------------------------------------------------------
     def decode_step_time_s(self, batch: int, ctx_len: int, tp: int) -> float:
-        """One decode iteration for `batch` sequences with context `ctx_len`.
-
-        For fixed (batch, tp) the roofline is exactly piecewise-affine in
-        the context length (linear KV term under a max() with a constant
-        compute term, plus constant collectives), so the hot path evaluates
-        cached affine coefficients in O(1) — exact, no quantization."""
-        if not _CACHING_ENABLED:
-            return self._decode_step_raw(batch, ctx_len, tp)
-        base_mem, kv_coeff, t_comp, t_coll, win = _decode_affine_cached(
-            self, int(batch), tp
-        )
-        eff = ctx_len if ctx_len < win else win
-        t_mem = base_mem + kv_coeff * eff
-        return (t_mem if t_mem > t_comp else t_comp) + t_coll
-
-    def _decode_affine_raw(self, batch: int, tp: int):
-        """(base_mem, kv_coeff, t_compute, t_coll, window) such that
-        step(ctx) = max(base_mem + kv_coeff*min(ctx, window), t_compute)
-                    + t_coll  — algebraically identical to _decode_step_raw."""
-        c = self.cfg
-        w_bytes = self.n_params * self.dtype_bytes / tp
-        if w_bytes <= self.hw.vmem_bytes * 0.8:
-            w_bytes = 0.0
-        bw = self.hw.hbm_bw * self.hw.bw_eff
-        kv_coeff = batch * self.kv_bytes_per_token() / tp / bw
-        base_mem = (w_bytes + batch * self.state_bytes() / tp) / bw
-        t_compute = 2.0 * self.n_active * batch / (
-            tp * self.hw.peak_flops * self.hw.flops_eff
-        )
-        act_bytes = batch * c.d_model * self.dtype_bytes / tp
-        t_coll = 2 * c.num_layers * self.allreduce_time(act_bytes, tp)
-        win = c.attn.window
-        return base_mem, kv_coeff, t_compute, t_coll, (win or math.inf)
-
-    def _decode_step_raw(self, batch: int, ctx_len: float, tp: int) -> float:
+        """One decode iteration for `batch` sequences with context `ctx_len`."""
         c = self.cfg
         w_bytes = self.n_params * self.dtype_bytes / tp
         # VMEM residency: shards that fit stay resident (TPU analogue of the
@@ -308,14 +156,7 @@ class PerfModel:
 
         TTFT ≈ queue + execution; sustained at utilization u, M/D/1-ish queue
         inflation 1/(1-u). We find the largest u where TTFT is still met.
-        Memoized on a quantized prompt length (the 40-step bisection only
-        runs on cache misses).
         """
-        if not _CACHING_ENABLED:
-            return self._max_prefill_rps_raw(prompt_len, tp, ttft_slo_ms)
-        return _max_prefill_rps_cached(self, quantize_len(prompt_len), tp, ttft_slo_ms)
-
-    def _max_prefill_rps_raw(self, prompt_len: float, tp: int, ttft_slo_ms: float) -> float:
         if not self.fits(tp):
             return 0.0
         t_exec = self.prefill_time_s(prompt_len, tp)
@@ -337,15 +178,7 @@ class PerfModel:
         return 0.9 * lo / t_exec
 
     def max_decode_batch(self, ctx_len: int, tp: int, tpot_slo_ms: float) -> int:
-        """Largest batch a TP-`tp` decode group can run within the TPOT SLO.
-
-        Memoized on a quantized context length (the binary search only
-        runs on cache misses)."""
-        if not _CACHING_ENABLED:
-            return self._max_decode_batch_raw(ctx_len, tp, tpot_slo_ms)
-        return _max_decode_batch_cached(self, quantize_len(ctx_len), tp, tpot_slo_ms)
-
-    def _max_decode_batch_raw(self, ctx_len: float, tp: int, tpot_slo_ms: float) -> int:
+        """Largest batch a TP-`tp` decode group can run within the TPOT SLO."""
         if not self.fits(tp):
             return 0
         lo, hi = 0, 4096

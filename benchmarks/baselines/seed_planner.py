@@ -1,3 +1,10 @@
+"""VENDORED SEED BASELINE — do not modify.
+
+Verbatim snapshot of src/repro/core/planner.py at the seed commit (ff4699c):
+re-runs the full itertools.product candidate sweep with uncached perf-model
+queries every control window, as the seed did.
+"""
+from __future__ import annotations
 """Goodput-aware cluster reconfiguration (paper §3.3.1).
 
 Every control window the planner:
@@ -13,7 +20,6 @@ The candidate space is a small fixed set of TP levels (×tiers), so planning
 cost is O(tiers · |TP|²) per window, independent of cluster size — matching
 the paper's §4.2.3 scalability argument.
 """
-from __future__ import annotations
 
 import itertools
 import math
@@ -87,11 +93,6 @@ class Planner:
         self.candidate_tps = tuple(candidate_tps)
         self.chip_step = chip_step
         self.mixed_discount = mixed_discount
-        # candidate selection is independent of the demand *rate* (only its
-        # length statistics), so memoize the chosen (tp_p, tp_d, thp, thd,
-        # kind) per (tier, quantized lengths, pool size) — the per-window
-        # itertools.product sweep then only runs when demand shape moves
-        self._cand_cache: Dict[tuple, Optional[tuple]] = {}
 
     # ---- goodput-efficiency estimation --------------------------------
     def stage_throughputs(
@@ -126,51 +127,6 @@ class Planner:
             rate = min(rate, rps)
         return rate, thp, thd
 
-    def clear_caches(self) -> None:
-        """Drop the per-instance candidate memo (cold-start benchmarking)."""
-        self._cand_cache.clear()
-
-    def _choose_candidate(
-        self, name: str, tier: SLOTier, d: TierDemand, total_chips: int
-    ) -> Optional[tuple]:
-        """Pick the tier's (tp_p, tp_d, thp, thd, kind) unit: near-best
-        goodput efficiency, smallest footprint as tiebreak (memoized on the
-        demand's quantized length statistics)."""
-        from repro.profiles.perf_model import quantize_len
-
-        ck = (
-            name, quantize_len(d.prompt_len), quantize_len(d.output_len),
-            total_chips,
-        )
-        if ck in self._cand_cache:
-            return self._cand_cache[ck]
-        entries = []
-        for tp_p, tp_d in itertools.product(self.candidate_tps, repeat=2):
-            if tp_p + tp_d > total_chips:
-                continue
-            ge, thp, thd = self.goodput_efficiency(tier, d, tp_p, tp_d)
-            if ge > 0:
-                entries.append((ge, tp_p, tp_d, thp, thd, "disagg"))
-        for tp in self.candidate_tps:
-            if tp > total_chips:
-                continue
-            thp, thd = self.stage_throughputs(tier, d, tp, tp)
-            if thp <= 0 or thd <= 0:
-                continue
-            unit = self.mixed_discount * min(thp, thd)
-            entries.append((unit / tp, tp, tp, unit, unit, "mixed"))
-        if not entries:
-            chosen = None
-        else:
-            ge_max = max(e[0] for e in entries)
-            near = [e for e in entries if e[0] >= 0.85 * ge_max]
-            _, tp_p, tp_d, thp, thd, kind = min(
-                near, key=lambda e: (e[1] + e[2] if e[5] == "disagg" else e[1], -e[0])
-            )
-            chosen = (tp_p, tp_d, thp, thd, kind)
-        self._cand_cache[ck] = chosen
-        return chosen
-
     # ---- weighted greedy assignment (discrete whole groups) -------------
     def plan(self, inputs: PlannerInputs) -> Plan:
         """Greedy over whole TP groups. Each step adds the whole group with
@@ -193,10 +149,28 @@ class Planner:
         state: Dict[str, dict] = {}
         for name, tier in slo_tiers.items():
             d = inputs.demands[name]
-            chosen = self._choose_candidate(name, tier, d, inputs.total_chips)
-            if chosen is None:
+            entries = []
+            for tp_p, tp_d in itertools.product(self.candidate_tps, repeat=2):
+                if tp_p + tp_d > inputs.total_chips:
+                    continue
+                ge, thp, thd = self.goodput_efficiency(tier, d, tp_p, tp_d)
+                if ge > 0:
+                    entries.append((ge, tp_p, tp_d, thp, thd, "disagg"))
+            for tp in self.candidate_tps:
+                if tp > inputs.total_chips:
+                    continue
+                thp, thd = self.stage_throughputs(tier, d, tp, tp)
+                if thp <= 0 or thd <= 0:
+                    continue
+                unit = self.mixed_discount * min(thp, thd)
+                entries.append((unit / tp, tp, tp, unit, unit, "mixed"))
+            if not entries:
                 continue
-            tp_p, tp_d, thp, thd, kind = chosen
+            ge_max = max(e[0] for e in entries)
+            near = [e for e in entries if e[0] >= 0.85 * ge_max]
+            ge, tp_p, tp_d, thp, thd, kind = min(
+                near, key=lambda e: (e[1] + e[2] if e[5] == "disagg" else e[1], -e[0])
+            )
             state[name] = dict(
                 tp_p=tp_p, tp_d=tp_d, thp=thp, thd=thd, P=0, D=0, kind=kind
             )

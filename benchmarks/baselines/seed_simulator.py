@@ -1,4 +1,13 @@
-"""Calibrated serving simulator with two interchangeable engines.
+"""VENDORED SEED BASELINE — do not modify.
+
+Verbatim snapshot of src/repro/serving/simulator.py at the seed commit
+(ff4699c), kept so benchmarks/sim_throughput.py can measure the event-driven
+engine against the original fixed-dt fluid-tick loop it replaced. Run it
+under `perf_caches_disabled()` to also restore the seed's uncached
+perf-model query cost.
+"""
+from __future__ import annotations
+"""Calibrated discrete-event (fluid-tick) serving simulator.
 
 Replays 10-minute traces at full cluster scale against the analytic profile
 model (profiles/perf_model.py, same constants as the dry-run roofline). This
@@ -15,39 +24,21 @@ Execution model per group (one TP group of `tp` chips):
   * reconfiguration blocks the group for the mechanism's switch cost:
     ~ms for Nitsum (zero-copy weights + pipelined KV migration), seconds to
     tens of seconds for the straw-men (weight reload, per-page migration).
-
-Engines (docs/simulator.md):
-  * ``engine="event"`` (default): next-event time advance. Each group arms
-    its next boundary event (prefill completion, earliest decode finish,
-    unblock, context-drift refresh) and the engine jumps straight to it,
-    integrating decode token gain analytically over the interval. ~10-40x
-    faster than the fluid reference at equivalent goodput (the equivalence
-    harness in repro.testing.sim_equivalence checks this per policy).
-  * ``engine="fluid"``: the original fixed-``dt`` fluid-tick reference loop,
-    kept as ground truth for the event engine and for the
-    benchmarks/sim_throughput.py speedup measurement.
 """
-from __future__ import annotations
 
-import bisect
-import heapq
 import math
 from collections import deque
 from dataclasses import dataclass, field, replace
-from itertools import count
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.goodput import GoodputMeter, RequestRecord, SLOTier
 from repro.core.migration import MigrationModel
-from repro.core.planner import Planner, PlannerInputs, TierDemand
-from repro.profiles.perf_model import PerfModel
+from benchmarks.baselines.seed_planner import Planner, PlannerInputs, TierDemand
+from benchmarks.baselines.seed_perf_model import PerfModel
 from repro.serving.global_scheduler import GlobalScheduler, GroupHandle
 from repro.traces.workload import TraceRequest, Workload
-
-_EPS = 1e-9
-_NO_CROSSERS = np.zeros(0, dtype=np.intp)
 
 
 @dataclass(frozen=True)
@@ -57,7 +48,7 @@ class GroupSpec:
     tp: int
 
 
-@dataclass(slots=True)
+@dataclass
 class SimReq:
     tr: TraceRequest
     feasible: bool = True
@@ -69,374 +60,55 @@ class SimReq:
     group: Optional["Group"] = None
     rate_cost: float = 0.0
     dispatch_gid: Optional[int] = None
-    _penalty: float = 0.0  # transient: reconfig stall charged on migration
 
     @property
     def ctx(self) -> float:
         return self.tr.prompt_len + self.tokens
 
 
-def prefill_priority(r: SimReq) -> tuple:
-    """Local-scheduler queue priority (§3.3.2): feasible SLO work first,
-    then best-effort (spilled infeasible), then background; FCFS within a
-    class. The key is static while a request is queued."""
-    return (r.background, not r.feasible, r.tr.arrival_s)
-
-
-class PrefillQueue:
-    """Prefill admission queue with order-preserving selection.
-
-    Two modes, chosen by the policy's ``slo_aware_prefill`` flag:
-      * FCFS (deque): plain append/popleft, plus the tail-pop / resort ops
-        request-migration policies (Llumnix) use.
-      * priority (binary heap on `prefill_priority`): O(log n) push/pop
-        replacing the O(n) rotate/pop/rotate selection of the fluid seed.
-        The key is static per request, so no re-heapify is ever needed.
-
-    In both modes removing the selected element preserves the relative
-    order of everything left behind (regression: test_prefill_queue_*).
-    """
-
-    __slots__ = ("_priority", "_q", "_heap", "_ctr")
-
-    def __init__(self, priority: bool = False, items: Sequence[SimReq] = ()):
-        self._priority = priority
-        self._ctr = count()
-        if priority:
-            self._q = None
-            self._heap = [(prefill_priority(r), next(self._ctr), r) for r in items]
-            heapq.heapify(self._heap)
-        else:
-            self._q = deque(items)
-            self._heap = None
-
-    def append(self, r: SimReq) -> None:
-        if self._priority:
-            heapq.heappush(self._heap, (prefill_priority(r), next(self._ctr), r))
-        else:
-            self._q.append(r)
-
-    def popleft(self) -> SimReq:
-        if self._priority:
-            return heapq.heappop(self._heap)[2]
-        return self._q.popleft()
-
-    def pop(self) -> SimReq:
-        """Tail pop (queue-migration policies; FCFS mode only)."""
-        return self._q.pop()
-
-    def pop_best(self) -> SimReq:
-        """Remove and return the highest-priority request, preserving the
-        order of the remaining queue."""
-        if self._priority:
-            return heapq.heappop(self._heap)[2]
-        best_i = min(range(len(self._q)), key=lambda i: prefill_priority(self._q[i]))
-        r = self._q[best_i]
-        del self._q[best_i]
-        return r
-
-    def resort(self, key) -> None:
-        """Reorder in place (FCFS mode; e.g. Llumnix strict-tier priority)."""
-        items = sorted(self._q, key=key)
-        self._q.clear()
-        self._q.extend(items)
-
-    def clear(self) -> List[SimReq]:
-        out = list(self)
-        if self._priority:
-            self._heap.clear()
-        else:
-            self._q.clear()
-        return out
-
-    def __len__(self) -> int:
-        return len(self._heap) if self._priority else len(self._q)
-
-    def __bool__(self) -> bool:
-        return len(self) > 0
-
-    def __iter__(self):
-        if self._priority:
-            return (e[2] for e in sorted(self._heap, key=lambda e: (e[0], e[1])))
-        return iter(self._q)
-
-    def __getitem__(self, i):
-        if self._priority:
-            return list(self)[i]
-        return self._q[i]
-
-
-class DecodeBatch:
-    """Structure-of-arrays decode state with a bounded running batch.
-
-    The running batch — the first ``cap`` requests in scheduling-priority
-    order (`prefill_priority`) — lives in parallel numpy arrays, so token
-    integration is one vectorized add and every array operation is O(cap).
-    Requests beyond the cap gain no tokens; they wait in a binary heap keyed
-    by the same priority and are promoted as batch slots free up. The
-    invariant at all times is that (batch set, waiting set) partitions the
-    requests exactly as the fluid seed's full per-tick sort would: the batch
-    holds the cap best-priority requests, in priority order.
-
-    ``tokens`` in the arrays is authoritative for batch members between
-    ``sync()`` points; ``sync()``/eviction write it back to the `SimReq`
-    objects before any outside code (switch-cost estimation,
-    reconfiguration) reads per-request context lengths. Waiting requests do
-    not gain tokens, so their ``SimReq.tokens`` is always current.
-    """
-
-    __slots__ = (
-        "cap", "reqs", "_keys", "_wait", "_ctr", "_n", "_data",
-        "_pfx_b", "_pfx_ctx_sum", "_pfx_min_rem", "_pending",
-    )
-
-    _TOK, _NEED, _PROMPT = 0, 1, 2
-
-    def __init__(self, cap: int):
-        self.cap = max(int(cap), 1)
-        self.reqs: List[SimReq] = []  # running batch, priority order
-        self._keys: List[tuple] = []
-        self._wait: List[tuple] = []  # heap of (key, seq, req) beyond cap
-        self._ctr = count()
-        self._n = 0
-        size = min(self.cap, 1 << 12)
-        # one (3, size) buffer: a membership change shifts one 2-D slice
-        # instead of three 1-D ones
-        self._data = np.zeros((3, size))
-        # incremental aggregates over the running batch: a uniform token
-        # gain g shifts the context sum by g*b and the min remaining by -g,
-        # so steady-state refresh events are O(1) numpy-free updates
-        self._pfx_b = -1
-        self._pfx_ctx_sum = 0.0
-        self._pfx_min_rem = 0.0
-        # uniform gain accumulated against the current prefix but not yet
-        # applied to the arrays — steady-state refresh events touch no numpy
-        self._pending = 0.0
-
-    def __len__(self) -> int:
-        return self._n + len(self._wait)
-
-    @property
-    def batch_len(self) -> int:
-        return self._n
-
-    def __iter__(self):
-        for r in self.reqs:
-            yield r
-        for e in self._wait:
-            yield e[2]
-
-    @property
-    def tokens(self) -> np.ndarray:
-        self._materialize()
-        return self._data[self._TOK, : self._n]
-
-    def _materialize(self) -> None:
-        """Apply the buffered uniform gain to the arrays. Must run before
-        any membership change or any read of individual token values."""
-        if self._pending:
-            self._data[self._TOK, : self._pfx_b] += self._pending
-            self._pending = 0.0
-
-    def _grow(self) -> None:
-        size = min(max(2 * self._data.shape[1], 16), max(self.cap, 16))
-        buf = np.zeros((3, size))
-        buf[:, : self._n] = self._data[:, : self._n]
-        self._data = buf
-
-    def _insert(self, k: tuple, r: SimReq) -> None:
-        self._materialize()
-        i = bisect.bisect_right(self._keys, k)
-        self.reqs.insert(i, r)
-        self._keys.insert(i, k)
-        n = self._n
-        data = self._data
-        if n == data.shape[1]:
-            self._grow()
-            data = self._data
-        data[:, i + 1 : n + 1] = data[:, i:n]
-        data[0, i] = r.tokens
-        data[1, i] = r.tr.output_len
-        data[2, i] = r.tr.prompt_len
-        self._n = n + 1
-        self._pfx_b = -1
-
-    def _evict_last(self) -> None:
-        self._materialize()
-        j = self._n - 1
-        r = self.reqs.pop()
-        k = self._keys.pop()
-        r.tokens = float(self._data[self._TOK, j])
-        self._n = j
-        self._pfx_b = -1
-        heapq.heappush(self._wait, (k, next(self._ctr), r))
-
-    def add(self, r: SimReq) -> bool:
-        """Insert a request; returns True iff the running batch changed."""
-        k = prefill_priority(r)
-        if self._n >= self.cap:
-            if k >= self._keys[-1]:
-                heapq.heappush(self._wait, (k, next(self._ctr), r))
-                return False
-            # newcomer outranks the worst batch member: displace it
-            self._evict_last()
-        self._insert(k, r)
-        return True
-
-    def remove_indices(self, idx) -> List[SimReq]:
-        """Remove (sorted ascending) batch positions; returns the removed
-        requests with their tokens synced back. Freed slots are refilled
-        from the waiting heap in priority order."""
-        self._materialize()
-        out = []
-        n = self._n
-        data = self._data
-        for j in reversed(list(idx)):
-            r = self.reqs[j]
-            r.tokens = float(data[0, j])
-            out.append(r)
-            del self.reqs[j]
-            del self._keys[j]
-            data[:, j : n - 1] = data[:, j + 1 : n]
-            n -= 1
-        self._n = n
-        self._pfx_b = -1
-        while self._wait and self._n < self.cap:
-            k, _, r = heapq.heappop(self._wait)
-            self._insert(k, r)
-        out.reverse()
-        return out
-
-    def _refresh_prefix(self, b: int) -> None:
-        self._materialize()
-        data = self._data
-        tok = data[0, :b]
-        self._pfx_ctx_sum = float(data[2, :b].sum() + tok.sum())
-        self._pfx_min_rem = float((data[1, :b] - tok).min())
-        self._pfx_b = b
-
-    def mean_ctx(self, b: int) -> float:
-        if self._pfx_b != b:
-            self._refresh_prefix(b)
-        return self._pfx_ctx_sum / b
-
-    def gain(self, g: float, b: int) -> None:
-        if self._pfx_b == b:
-            # numpy-free steady state: buffer the uniform gain and update
-            # the O(1) aggregates; arrays catch up at the next materialize
-            self._pending += g
-            self._pfx_ctx_sum += g * b
-            self._pfx_min_rem -= g
-        else:
-            self._materialize()
-            self._data[self._TOK, :b] += g
-            self._pfx_b = -1
-
-    def crossers(self, b: int) -> np.ndarray:
-        if self._pfx_b == b and self._pfx_min_rem > _EPS:
-            return _NO_CROSSERS
-        self._materialize()
-        data = self._data
-        return np.nonzero(data[0, :b] >= data[1, :b] - _EPS)[0]
-
-    def min_remaining(self, b: int) -> float:
-        if self._pfx_b != b:
-            self._refresh_prefix(b)
-        return self._pfx_min_rem
-
-    def advance_fluid(self, gain: float, b: int) -> List[SimReq]:
-        """Fluid-tick semantics: apply gain, remove+return finishers
-        (seed condition: tokens >= output_len, no epsilon)."""
-        self.gain(gain, b)
-        if self._pfx_b == b and self._pfx_min_rem > 0.0:
-            return []
-        self._materialize()
-        data = self._data
-        idx = np.nonzero(data[0, :b] >= data[1, :b])[0]
-        if len(idx) == 0:
-            return []
-        return self.remove_indices(idx)
-
-    def sync(self) -> None:
-        self._materialize()
-        toks = self._data[self._TOK]
-        for j, r in enumerate(self.reqs):
-            r.tokens = float(toks[j])
-
-    def clear(self) -> List[SimReq]:
-        self.sync()
-        out = self.reqs + [e[2] for e in self._wait]
-        self.reqs = []
-        self._keys = []
-        self._wait = []
-        self._n = 0
-        return out
-
-
 class Group:
-    __slots__ = (
-        "gid", "spec", "sim", "prefill_q", "cur", "decode", "blocked_until",
-        "batch_cap", "t_sync", "_epoch", "_ev_kind", "_step", "_batch_n",
-        "_decode_active",
-    )
-
     def __init__(self, gid: int, spec: GroupSpec, sim: "Simulator"):
         self.gid = gid
         self.spec = spec
         self.sim = sim
-        self.prefill_q = PrefillQueue(priority=sim.policy.slo_aware_prefill)
+        self.prefill_q: deque = deque()
         self.cur: Optional[SimReq] = None
+        self.decoding: List[SimReq] = []
         self.blocked_until: float = 0.0
         self.batch_cap = sim.decode_cap(spec)
-        self.decode = DecodeBatch(self.batch_cap)
-        # --- event-engine state ---
-        self.t_sync: float = sim.now  # decode/prefill integrated up to here
-        self._epoch: int = 0  # invalidates stale heap entries
-        self._ev_kind: Optional[str] = None
-        self._step: float = 0.0  # decode step time held over the interval
-        self._batch_n: int = 0
-        self._decode_active: bool = False
-
-    @property
-    def decoding(self) -> List[SimReq]:
-        """All decode-phase requests (running batch in priority order, then
-        waiting). NOTE: per-request ``tokens`` on batch members is only
-        current after ``decode.sync()`` (the engines sync before any policy
-        code that reads them runs)."""
-        return list(self.decode)
 
     @property
     def queue_len(self) -> int:
-        return len(self.prefill_q) + (1 if self.cur else 0) + len(self.decode)
+        return len(self.prefill_q) + (1 if self.cur else 0) + len(self.decoding)
 
     def live_requests(self) -> List[SimReq]:
-        self.decode.sync()
-        out = list(self.prefill_q) + list(self.decode)  # batch + waiting
+        out = list(self.prefill_q) + self.decoding
         if self.cur is not None:
             out.append(self.cur)
         return out
 
     def clear(self) -> List[SimReq]:
-        out = list(self.prefill_q.clear()) + self.decode.clear()
-        if self.cur is not None:
-            out.append(self.cur)
+        out = self.live_requests()
+        self.prefill_q.clear()
+        self.decoding.clear()
         self.cur = None
         return out
-
-    def add_decode(self, r: SimReq) -> bool:
-        """Returns True iff the running batch's membership changed."""
-        return self.decode.add(r)
 
     def _next_prefill(self) -> SimReq:
         """SLO-aware policies serve feasible requests first (local scheduler
         queue priority, §3.3.2); SLO-agnostic engines are FCFS."""
         if not self.sim.policy.slo_aware_prefill:
             return self.prefill_q.popleft()
-        return self.prefill_q.pop_best()
+        best_i, best_key = 0, None
+        for i, r in enumerate(self.prefill_q):
+            key = (r.background, not r.feasible, r.tr.arrival_s)
+            if best_key is None or key < best_key:
+                best_i, best_key = i, key
+        self.prefill_q.rotate(-best_i)
+        r = self.prefill_q.popleft()
+        self.prefill_q.rotate(best_i)
+        return r
 
-    # ------------------------------------------------------------------
-    # fluid engine: fixed-dt tick (reference semantics)
-    # ------------------------------------------------------------------
     def tick(self, now: float, dt: float) -> None:
         if now < self.blocked_until:
             return
@@ -458,74 +130,23 @@ class Group:
                     self.sim.on_prefill_done(self.cur, self, now + (dt - budget))
                     self.cur = None
         # ---- decode ----
-        if self.spec.stage in ("decode", "mixed") and len(self.decode) and budget > 1e-12:
-            b = self.decode.batch_len
-            ctx = self.decode.mean_ctx(b)
+        if self.spec.stage in ("decode", "mixed") and self.decoding and budget > 1e-12:
+            # feasible first (local scheduler priority), then best-effort/bg
+            self.decoding.sort(key=lambda r: (r.background, not r.feasible, r.tr.arrival_s))
+            batch = self.decoding[: self.batch_cap]
+            b = len(batch)
+            ctx = float(np.mean([r.ctx for r in batch]))
             step = self.sim.perf.decode_step_time_s(b, ctx, self.spec.tp)
-            for r in self.decode.advance_fluid(budget / step, b):
-                r.finish_s = now + dt
+            gain = budget / step
+            fin = []
+            for r in batch:
+                r.tokens += gain
+                if r.tokens >= r.tr.output_len:
+                    r.finish_s = now + dt
+                    fin.append(r)
+            for r in fin:
+                self.decoding.remove(r)
                 self.sim.on_finish(r)
-
-    # ------------------------------------------------------------------
-    # event engine: analytic advance + next-boundary computation
-    # ------------------------------------------------------------------
-    def advance_to(self, t: float) -> None:
-        """Integrate state from ``t_sync`` to ``t``. The engine guarantees no
-        boundary (prefill completion, decode finish, unblock) lies strictly
-        inside the interval, so a single regime applies throughout."""
-        if t <= self.t_sync:
-            return
-        if self.t_sync < self.blocked_until:
-            self.t_sync = min(t, self.blocked_until)
-            if self.t_sync >= t:
-                return
-        dt = t - self.t_sync
-        if self.spec.stage in ("prefill", "mixed") and self.cur is not None:
-            self.cur.prefill_left_s = max(self.cur.prefill_left_s - dt, 0.0)
-        elif self._decode_active and len(self.decode):
-            self.decode.gain(dt / self._step, self._batch_n)
-        self.t_sync = t
-
-    def arm(self) -> float:
-        """Compute (and cache the parameters of) this group's next boundary
-        event; returns its absolute time (inf = idle). May start the next
-        queued prefill, mirroring the fluid tick's immediate pickup."""
-        base = self.t_sync
-        self._decode_active = False
-        self._ev_kind = None
-        decode = self.decode
-        stage = self.spec.stage
-        if base < self.blocked_until:
-            if self.cur is None and not self.prefill_q and not decode.batch_len:
-                return math.inf
-            self._ev_kind = "unblock"
-            return self.blocked_until
-        if stage != "decode":  # prefill | mixed
-            cur = self.cur
-            if cur is None and self.prefill_q:
-                cur = self.cur = self._next_prefill()
-                cur.prefill_left_s = self.sim.perf.prefill_time_s(
-                    cur.tr.prompt_len, self.spec.tp
-                )
-            if cur is not None:
-                self._ev_kind = "prefill"
-                return base + cur.prefill_left_s
-        b = decode.batch_len
-        if b and stage != "prefill":  # decode | mixed
-            ctx = decode.mean_ctx(b)
-            step = self._step = self.sim.perf.decode_step_time_s(
-                b, ctx, self.spec.tp
-            )
-            self._batch_n = b
-            self._decode_active = True
-            self._ev_kind = "decode"
-            dt_fin = max(decode.min_remaining(b), 0.0) * step
-            # context-drift refresh: holding `step` constant is only valid
-            # while the batch's mean context is ~unchanged; re-arm after
-            # ctx_refresh_frac relative growth (docs/simulator.md §Error)
-            gain_cap = max(8.0, self.sim.ctx_refresh_frac * ctx)
-            return base + min(dt_fin, gain_cap * step)
-        return math.inf
 
 
 # ===========================================================================
@@ -619,7 +240,7 @@ class Policy:
         ]
         if not cands:
             return frm
-        return min(cands, key=lambda g: len(g.decode))
+        return min(cands, key=lambda g: len(g.decoding))
 
 
 class StaticPolicy(Policy):
@@ -718,8 +339,8 @@ class LlumnixPolicy(StaticPolicy):
             # live migration overhead hidden but not free: brief stall
             hi.blocked_until = max(hi.blocked_until, sim.now + 0.05)
         for g in sim.groups:  # strict-priority queues
-            g.prefill_q.resort(
-                key=lambda r: (r.tr.tier != "strict", r.tr.arrival_s)
+            g.prefill_q = deque(
+                sorted(g.prefill_q, key=lambda r: (r.tr.tier != "strict", r.tr.arrival_s))
             )
         return None
 
@@ -879,37 +500,7 @@ class NitsumPolicy(Policy):
         reload_s = self.perf.n_params * 2 / 1e9
         return reload_s + self.mig.naive_per_page_s(max(kv_bytes, 1.0))
 
-    def _sync_demand_sig(self, sim) -> tuple:
-        """Change signature for the scheduler's profiled-bandwidth inputs:
-        the group set plus each tier's window-mean prompt length, bucketed
-        at 2% so per-arrival jitter of the mean does not force a full
-        handle rebuild (max_rps staleness is bounded by the bucket).
-        Reads the rolling sums directly — this runs on every arrival."""
-        sim._recent_expire()
-        sums = sim._tier_sums
-        log = math.log
-        sig = [sim._groups_ver]
-        tot_n = tot_sp = 0
-        for tier in self.tiers:
-            st = sums.get(tier)
-            if st and st[0]:
-                tot_n += st[0]
-                tot_sp += st[1]
-                sig.append(round(log(max(st[1] / st[0], 1.0)) * 50))
-            else:
-                sig.append(-1)
-        sig.append(round(log(max(tot_sp / tot_n, 1.0)) * 50) if tot_n else -1)
-        return tuple(sig)
-
     def _sync_scheduler(self, sim) -> None:
-        sig = self._sync_demand_sig(sim)
-        gs = self.gs
-        if gs is not None and getattr(self, "_sync_sig", None) == sig:
-            # bandwidth profile unchanged: refresh only the load tiebreak
-            gsg = gs.groups
-            for g in sim.groups:
-                gsg[g.gid].queue_len = g.queue_len
-            return
         handles = []
         for g in sim.groups:
             tier = g.spec.tier
@@ -925,11 +516,10 @@ class NitsumPolicy(Policy):
                 queue_len=g.queue_len,
             )
             handles.append(h)
-        if gs is None:
+        if self.gs is None:
             self.gs = GlobalScheduler(handles)
         else:
-            gs.replace_groups(handles)
-        self._sync_sig = sig
+            self.gs.replace_groups(handles)
 
     def route(self, sim, req: SimReq) -> Group:
         if not self.slo_aware:
@@ -1002,12 +592,7 @@ class Simulator:
         dt: float = 0.02,
         window_s: float = 1.0,
         monitor_window_s: float = 10.0,
-        engine: str = "event",
-        ctx_refresh_frac: float = 0.02,
-        grid_parity: bool = True,
     ):
-        if engine not in ("event", "fluid"):
-            raise ValueError(f"unknown engine {engine!r}")
         self.perf = perf
         self.tiers = {t.name: t for t in tiers}
         self.n_chips = n_chips
@@ -1015,89 +600,37 @@ class Simulator:
         self.dt = dt
         self.window_s = window_s
         self.monitor_window_s = monitor_window_s
-        self.engine = engine
-        self.ctx_refresh_frac = ctx_refresh_frac
-        # grid parity (event engine only): admit arrivals and stamp decode
-        # finishes on the fluid engine's dt grid, so the two engines differ
-        # only by the analytic-integration error, not by discretization
-        # artifacts the fluid reference itself introduces (docs/simulator.md)
-        self.grid_parity = grid_parity
         self.now = 0.0
         self.groups: List[Group] = []
         self._gid = 0
-        self._by_gid: Dict[int, Group] = {}
-        self._groups_ver = 0  # bumped whenever the group set changes
-        self._bg_tiers = {t.name for t in tiers if t.background}
         self.meter = GoodputMeter(self.tiers)
         self.finished: List[SimReq] = []
         self.recent: deque = deque()  # (arrival_s, tier, plen, olen)
-        # incremental per-tier rolling sums over the monitor window:
-        # tier -> [count, sum_prompt, sum_output]
-        self._tier_sums: Dict[str, List[float]] = {}
-        self._stats_ver = 0  # bumped on every push/expire
-        self._stats_cache: Dict[Optional[str], tuple] = {}
         self.timeline: List[Tuple[float, float]] = []  # (t, goodput in window)
         self._win_good = 0
         self.last_planning_ms = 0.0
         self.reconfig_count = 0
-        self._tier_defaults: Dict[Optional[str], TierDemand] = {}
-        # event-engine machinery
-        self._heap: List[tuple] = []
-        self._seq = count()
+        self._tier_defaults: Dict[str, TierDemand] = {}
 
     # ---- bookkeeping ---------------------------------------------------
-    def decode_cap(self, spec: GroupSpec) -> int:
-        """Decode batch cap for a group spec (delegates to the policy)."""
-        return self.policy.decode_cap(self, spec)
-
     def group_by_id(self, gid: int) -> Group:
-        g = self._by_gid.get(gid)
-        if g is not None:
-            return g
+        for g in self.groups:
+            if g.gid == gid:
+                return g
         return self.groups[0]
 
-    def _recent_push(self, tr: TraceRequest) -> None:
-        self.recent.append((tr.arrival_s, tr.tier, tr.prompt_len, tr.output_len))
-        s = self._tier_sums.setdefault(tr.tier, [0, 0, 0])
-        s[0] += 1
-        s[1] += tr.prompt_len
-        s[2] += tr.output_len
-        self._stats_ver += 1
-
-    def _recent_expire(self) -> None:
-        cut = self.now - self.monitor_window_s
-        recent = self.recent
-        while recent and recent[0][0] < cut:
-            _, tier, p, o = recent.popleft()
-            s = self._tier_sums[tier]
-            s[0] -= 1
-            s[1] -= p
-            s[2] -= o
-            self._stats_ver += 1
-
     def tier_stats(self, tier: Optional[str]) -> TierDemand:
-        self._recent_expire()
-        hit = self._stats_cache.get(tier)
-        if hit is not None and hit[0] == self._stats_ver:
-            return hit[1]
-        d = self._tier_stats_compute(tier)
-        self._stats_cache[tier] = (self._stats_ver, d)
-        return d
-
-    def _tier_stats_compute(self, tier: Optional[str]) -> TierDemand:
-        if tier is None:
-            n = sum(s[0] for s in self._tier_sums.values())
-            sp = sum(s[1] for s in self._tier_sums.values())
-            so = sum(s[2] for s in self._tier_sums.values())
-        else:
-            s = self._tier_sums.get(tier)
-            n, sp, so = (s if s else (0, 0, 0))
-        if not n:
+        rec = [r for r in self.recent if tier is None or r[1] == tier]
+        if not rec:
             return self._tier_defaults.get(
                 tier, TierDemand(rps=0.0, prompt_len=1024, output_len=128)
             )
         span = max(self.monitor_window_s, 1e-6)
-        return TierDemand(rps=n / span, prompt_len=int(sp / n), output_len=int(so / n))
+        return TierDemand(
+            rps=len(rec) / span,
+            prompt_len=int(np.mean([r[2] for r in rec])),
+            output_len=int(np.mean([r[3] for r in rec])),
+        )
 
     def _apply_specs(self, specs: List[GroupSpec], charge_cost: bool) -> None:
         old = self.groups
@@ -1105,8 +638,6 @@ class Simulator:
         if old and sorted(specs, key=key) == sorted((g.spec for g in old), key=key):
             return  # hysteresis: same multiset of groups, no reconfiguration
         self.reconfig_count += bool(old)
-        for g in old:
-            g.decode.sync()  # switch-cost estimation reads r.ctx below
         # keep groups whose spec survives; rebuild the rest
         new_groups: List[Group] = []
         pool = list(old)
@@ -1129,14 +660,12 @@ class Simulator:
                 r._penalty = cost  # noqa: attached transient
                 orphans.append(r)
         self.groups = new_groups
-        self._by_gid = {g.gid: g for g in new_groups}
-        self._groups_ver += 1
         for r in orphans:
             if r.tokens > 0 or r.first_token_s is not None:
                 tgt = self.policy.decode_target(self, r, self.groups[0])
-                tgt.add_decode(r)
+                tgt.decoding.append(r)
                 tgt.blocked_until = max(
-                    tgt.blocked_until, self.now + r._penalty
+                    tgt.blocked_until, self.now + getattr(r, "_penalty", 0.0)
                 )
             else:
                 tgt = self.policy.route(self, r)
@@ -1147,7 +676,7 @@ class Simulator:
     def on_prefill_done(self, req: SimReq, group: Group, t: float) -> None:
         req.first_token_s = t
         req.tokens = 1.0
-        if req.dispatch_gid is not None and isinstance(self.policy, NitsumPolicy):
+        if isinstance(self.policy, NitsumPolicy) and req.dispatch_gid is not None:
             if self.policy.gs is not None:
                 self.policy.gs.complete(req.dispatch_gid, req.rate_cost)
         if req.tr.output_len <= 1:
@@ -1155,17 +684,7 @@ class Simulator:
             self.on_finish(req)
             return
         tgt = self.policy.decode_target(self, req, group)
-        if self.engine == "event" and tgt is not group:
-            tgt.advance_to(self.now)
-            touched = tgt.add_decode(req)
-            req.group = tgt
-            if tgt._ev_kind == "decode" and not touched:
-                # newcomer went to the waiting heap; the armed event on the
-                # (unchanged) running batch is still valid
-                return
-            self._schedule_group(tgt)
-            return
-        tgt.add_decode(req)
+        tgt.decoding.append(req)
         req.group = tgt
 
     def on_finish(self, req: SimReq) -> None:
@@ -1179,8 +698,8 @@ class Simulator:
         if self.meter.meets_slo(rec):
             self._win_good += 1
 
-    # ---- shared run setup ------------------------------------------------
-    def _setup(self, workload: Workload) -> List[TraceRequest]:
+    # ---- main loop --------------------------------------------------------
+    def run(self, workload: Workload, drain_s: float = 60.0) -> GoodputMeter:
         for t in self.tiers.values():
             sub = [r for r in workload.requests if r.tier == t.name]
             if sub:
@@ -1195,38 +714,21 @@ class Simulator:
             output_len=int(np.mean([r.output_len for r in workload.requests])),
         )
         self._apply_specs(self.policy.initial_specs(self), charge_cost=False)
-        return sorted(workload.requests, key=lambda r: r.arrival_s)
-
-    def _admit(self, tr: TraceRequest) -> None:
-        self._recent_push(tr)
-        req = SimReq(tr, background=tr.tier in self._bg_tiers)
-        g = self.policy.route(self, req)
-        if self.engine == "event" and g._ev_kind not in ("prefill", "unblock"):
-            # an armed prefill/unblock event is unaffected by a queue append;
-            # otherwise (idle, or decoding that prefill now preempts) re-arm
-            g.advance_to(self.now)
-            g.prefill_q.append(req)
-            req.group = g
-            self._schedule_group(g)
-            return
-        g.prefill_q.append(req)
-        req.group = g
-
-    # ---- main loops --------------------------------------------------------
-    def run(self, workload: Workload, drain_s: float = 60.0) -> GoodputMeter:
-        if self.engine == "fluid":
-            return self._run_fluid(workload, drain_s)
-        return self._run_event(workload, drain_s)
-
-    def _run_fluid(self, workload: Workload, drain_s: float) -> GoodputMeter:
-        arrivals = deque(self._setup(workload))
+        arrivals = deque(workload.requests)
         horizon = workload.horizon_s + drain_s
         next_window = self.window_s
         next_second = 1.0
         while self.now < horizon:
             while arrivals and arrivals[0].arrival_s <= self.now:
-                self._admit(arrivals.popleft())
-            self._recent_expire()
+                tr = arrivals.popleft()
+                self.recent.append((tr.arrival_s, tr.tier, tr.prompt_len, tr.output_len))
+                tier = self.tiers.get(tr.tier)
+                req = SimReq(tr, background=bool(tier and tier.background))
+                g = self.policy.route(self, req)
+                g.prefill_q.append(req)
+                req.group = g
+            while self.recent and self.recent[0][0] < self.now - self.monitor_window_s:
+                self.recent.popleft()
             for g in self.groups:
                 g.tick(self.now, self.dt)
             self.now += self.dt
@@ -1241,110 +743,6 @@ class Simulator:
                 next_window += self.window_s
         return self.meter
 
-    # ---- event engine ----------------------------------------------------
-    def _schedule_group(self, g: Group) -> None:
-        g._epoch += 1
-        t = g.arm()
-        if t != math.inf:
-            heapq.heappush(self._heap, (t, next(self._seq), g.gid, g._epoch))
-
-    def _peek_group_event(self) -> float:
-        h = self._heap
-        while h:
-            t, _, gid, epoch = h[0]
-            g = self._by_gid.get(gid)
-            if g is None or epoch != g._epoch:
-                heapq.heappop(h)
-                continue
-            return t
-        return math.inf
-
-    def _handle_group_event(self) -> None:
-        t, _, gid, epoch = heapq.heappop(self._heap)
-        g = self._by_gid.get(gid)
-        if g is None or epoch != g._epoch:
-            return
-        g.advance_to(t)
-        kind = g._ev_kind
-        if kind == "prefill" and g.cur is not None and g.cur.prefill_left_s <= _EPS:
-            req = g.cur
-            g.cur = None
-            self.on_prefill_done(req, g, t)
-        elif kind == "decode":
-            idx = g.decode.crossers(g._batch_n)
-            if len(idx):
-                # parity: the fluid reference stamps decode finishes at the
-                # end of the tick the crossing fell in
-                stamp = (
-                    math.ceil(t / self.dt - 1e-9) * self.dt
-                    if self.grid_parity else t
-                )
-                for r in g.decode.remove_indices(idx):
-                    r.finish_s = stamp
-                    self.on_finish(r)
-            # else: context-drift refresh — re-arm recomputes the step
-        self._schedule_group(g)
-
-    def _window_boundary(self) -> None:
-        if type(self.policy).window is Policy.window:
-            return  # policy's window() is the no-op base — nothing to do
-        # bring every group's integrated state up to the boundary so the
-        # policy observes current queues (per-request tokens stay lazy:
-        # _apply_specs syncs the groups whose contexts it actually reads)
-        for g in self.groups:
-            g.advance_to(self.now)
-        specs = self.policy.window(self)
-        if specs is not None:
-            self._apply_specs(specs, charge_cost=True)
-        # queue contents / blocked_until / group set may all have changed
-        for g in self.groups:
-            self._schedule_group(g)
-
-    def _run_event(self, workload: Workload, drain_s: float) -> GoodputMeter:
-        arr = self._setup(workload)
-        horizon = workload.horizon_s + drain_s
-        i, n = 0, len(arr)
-        if self.grid_parity:
-            # parity: the fluid reference only admits arrivals at tick starts
-            dt = self.dt
-            adm = [math.ceil(r.arrival_s / dt - 1e-9) * dt for r in arr]
-        else:
-            adm = [r.arrival_s for r in arr]
-        next_window = self.window_s
-        next_second = 1.0
-        self._heap = []
-        for g in self.groups:
-            self._schedule_group(g)
-        INF = math.inf
-        peek = self._peek_group_event
-        handle = self._handle_group_event
-        admit = self._admit
-        while True:
-            t_grp = peek()
-            t_arr = adm[i] if i < n else INF
-            t = min(t_arr, t_grp, next_window, next_second)
-            if t >= horizon:
-                break
-            self.now = t
-            if t_arr <= t:
-                while i < n and adm[i] <= t:
-                    admit(arr[i])
-                    i += 1
-                t_grp = peek()
-            while t_grp <= t:
-                handle()
-                t_grp = peek()
-            if t >= next_second:
-                self._recent_expire()  # static policies never query stats
-                self.timeline.append((t, self._win_good / 1.0))
-                self._win_good = 0
-                next_second += 1.0
-            if t >= next_window:
-                self._window_boundary()
-                next_window += self.window_s
-        self.now = horizon
-        return self.meter
-
     def goodput(self, workload: Workload) -> float:
         return self.meter.goodput(workload.horizon_s)
 
@@ -1356,7 +754,6 @@ def run_system(
     n_chips: int,
     workload: Workload,
     candidate_tps=(1, 2, 4, 8),
-    engine: str = "event",
     **policy_kw,
 ):
     tps = [t for t in candidate_tps if t <= n_chips]
@@ -1383,6 +780,9 @@ def run_system(
         policy = StaticPolicy(perf, tiers, tp=tp, disaggregated=disagg, candidate_tps=tps)
     else:
         policy = mk[system]()
-    sim = Simulator(perf, tiers, n_chips, policy, engine=engine)
+    sim = Simulator(perf, tiers, n_chips, policy)
     meter = sim.run(workload)
     return sim, meter
+
+
+Simulator.decode_cap = lambda self, spec: self.policy.decode_cap(self, spec)

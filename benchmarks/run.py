@@ -22,6 +22,7 @@ MODULES = [
     "fig15_scalability",
     "fig16_17_sensitivity",
     "sched_throughput",
+    "sim_throughput",
     "roofline_table",
 ]
 

@@ -31,7 +31,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models.params import ParamDef, is_def, tree_map_defs
-from repro.parallel.sharding import ShardingRules, make_exec_config, pspec_for
+from repro.parallel.sharding import (
+    ShardingRules, make_exec_config, pspec_for, shard_map_compat,
+)
 
 
 def model_dim_of(d: ParamDef, rules: ShardingRules) -> Optional[int]:
@@ -197,7 +199,7 @@ class WeightStore:
                 outs.append(jax.lax.dynamic_slice_in_dim(x, off, width, plan.dim))
             return tuple(outs)
 
-        smapped = jax.shard_map(
+        smapped = shard_map_compat(
             inner, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
             check_vma=False,
         )

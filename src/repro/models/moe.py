@@ -23,11 +23,10 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
 
 from repro.configs.base import ModelConfig, MoESpec
 from repro.models.params import ParamDef
-from repro.parallel.sharding import pspec_for, shard_constraint
+from repro.parallel.sharding import pspec_for, shard_constraint, shard_map_compat as shard_map
 
 
 def _expert_weight_specs(rules, mesh):

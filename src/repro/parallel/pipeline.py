@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.parallel.sharding import shard_map_compat
+
 
 def pipeline_apply(
     body: Callable,  # (h, stage_params, period_idx_within_stage) -> h
@@ -79,7 +81,7 @@ def pipeline_apply(
         return jax.lax.psum(out, "pipe")
 
     pspec = P("pipe")
-    out = jax.shard_map(
+    out = shard_map_compat(
         stage_fn,
         mesh=mesh,
         in_specs=(

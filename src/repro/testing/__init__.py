@@ -1,0 +1,1 @@
+"""Verification harnesses: multi-device checks, engine-equivalence."""

@@ -147,7 +147,7 @@ def check_moe_sharded() -> None:
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model), jnp.float32)
 
     y_local, aux_local = moe_apply_local(params, x, cfg)
-    with jax.set_mesh(mesh):
+    with mesh:  # Mesh-as-contextmanager works on old and new jax alike
         y_sh, aux_sh = jax.jit(
             lambda p, x: moe_apply_sharded(p, x, cfg, RULES, mesh)
         )(params, x)

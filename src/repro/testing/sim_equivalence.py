@@ -1,0 +1,111 @@
+"""Engine-equivalence harness: event-driven vs fluid-tick reference.
+
+The event engine (serving/simulator.py, ``engine="event"``) must reproduce
+the fluid-tick reference's *results* — per-policy goodput on seeded
+workloads — while being an order of magnitude faster. This module runs the
+same (policy, workload, cluster) configuration through both engines and
+reports per-policy relative goodput error plus supporting detail (per-tier
+goodput, finished-request counts, wall-clock).
+
+Used by tests/test_sim_equivalence.py (CI gate: |rel err| <= 2%) and by
+benchmarks/sim_throughput.py (records parity next to the speedup numbers).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.goodput import SLOTier
+from repro.profiles.perf_model import PerfModel, clear_perf_caches
+from repro.serving.simulator import run_system
+from repro.traces.workload import Workload
+
+DEFAULT_SYSTEMS = ("nitsum", "sglang")
+DEFAULT_RTOL = 0.02
+
+
+@dataclass
+class EquivalenceResult:
+    system: str
+    goodput_event: float
+    goodput_fluid: float
+    rel_err: float
+    per_tier_event: Dict[str, float] = field(default_factory=dict)
+    per_tier_fluid: Dict[str, float] = field(default_factory=dict)
+    finished_event: int = 0
+    finished_fluid: int = 0
+    wall_event_s: float = 0.0
+    wall_fluid_s: float = 0.0
+
+    @property
+    def speedup(self) -> float:
+        return self.wall_fluid_s / max(self.wall_event_s, 1e-9)
+
+    def within(self, rtol: float = DEFAULT_RTOL) -> bool:
+        return abs(self.rel_err) <= rtol
+
+    def summary(self) -> str:
+        return (
+            f"{self.system}: event={self.goodput_event:.3f} "
+            f"fluid={self.goodput_fluid:.3f} rel_err={self.rel_err:+.4f} "
+            f"speedup={self.speedup:.1f}x"
+        )
+
+
+def compare_engines(
+    system: str,
+    perf: PerfModel,
+    tiers: Sequence[SLOTier],
+    n_chips: int,
+    workload: Workload,
+    cold_caches: bool = True,
+) -> EquivalenceResult:
+    """Run one policy through both engines on the same workload."""
+    out = {}
+    for engine in ("fluid", "event"):
+        if cold_caches:
+            clear_perf_caches()
+        t0 = time.perf_counter()
+        sim, meter = run_system(system, perf, tiers, n_chips, workload, engine=engine)
+        wall = time.perf_counter() - t0
+        out[engine] = (
+            meter.goodput(workload.horizon_s),
+            meter.per_tier_goodput(workload.horizon_s),
+            len(sim.finished),
+            wall,
+        )
+    ge, pte, fe, we = out["event"]
+    gf, ptf, ff, wf = out["fluid"]
+    return EquivalenceResult(
+        system=system,
+        goodput_event=ge,
+        goodput_fluid=gf,
+        rel_err=(ge - gf) / max(gf, 1e-9),
+        per_tier_event=pte,
+        per_tier_fluid=ptf,
+        finished_event=fe,
+        finished_fluid=ff,
+        wall_event_s=we,
+        wall_fluid_s=wf,
+    )
+
+
+def check_equivalence(
+    perf: PerfModel,
+    tiers: Sequence[SLOTier],
+    n_chips: int,
+    workload: Workload,
+    systems: Sequence[str] = DEFAULT_SYSTEMS,
+    rtol: float = DEFAULT_RTOL,
+) -> List[EquivalenceResult]:
+    """Compare every policy; raises AssertionError on a parity violation."""
+    results = [
+        compare_engines(s, perf, tiers, n_chips, workload) for s in systems
+    ]
+    bad = [r for r in results if not r.within(rtol)]
+    if bad:
+        raise AssertionError(
+            "engine parity violated: " + "; ".join(r.summary() for r in bad)
+        )
+    return results

@@ -1,0 +1,104 @@
+"""GlobalScheduler bandwidth-accounting invariants (paper §3.3.2).
+
+The scheduler tracks per-group SLO-compliant available bandwidth as
+committed_rps; dispatch/complete round-trips must conserve it, keep it
+non-negative, spill infeasible work round-robin, and survive group
+replacement across reconfigurations.
+"""
+import pytest
+
+from repro.serving.global_scheduler import GlobalScheduler, GroupHandle
+
+
+def mk_groups():
+    return [
+        GroupHandle(0, "strict", "prefill", 2, max_rps=3.0),
+        GroupHandle(1, "strict", "mixed", 2, max_rps=2.0),
+        GroupHandle(2, "relaxed", "prefill", 2, max_rps=3.0),
+    ]
+
+
+def total_committed(gs):
+    return sum(g.committed_rps for g in gs.groups.values())
+
+
+def test_dispatch_complete_round_trip_conserves_bandwidth():
+    gs = GlobalScheduler(mk_groups())
+    dispatched = []
+    for _ in range(5):
+        g, feas = gs.dispatch("strict", 1.0)
+        dispatched.append((g.gid, feas))
+    # feasible dispatches commit bandwidth; spills commit nothing
+    feas_n = sum(1 for _, f in dispatched if f)
+    assert feas_n == 5  # 3.0 + 2.0 strict-capacity at unit cost
+    assert total_committed(gs) == pytest.approx(5.0)
+    for gid, feas in dispatched:
+        if feas:
+            gs.complete(gid, 1.0)
+    assert total_committed(gs) == pytest.approx(0.0)
+    for g in gs.groups.values():
+        assert g.committed_rps >= 0.0
+
+
+def test_committed_rps_never_negative():
+    gs = GlobalScheduler(mk_groups())
+    g, feas = gs.dispatch("strict", 1.0)
+    assert feas
+    gs.complete(g.gid, 1.0)
+    gs.complete(g.gid, 1.0)  # double-complete must clamp at zero
+    assert gs.groups[g.gid].committed_rps == 0.0
+    gs.complete(999, 1.0)  # unknown gid is a no-op
+
+
+def test_spill_round_robins_over_all_prefill_groups():
+    gs = GlobalScheduler(mk_groups())
+    # exhaust strict bandwidth
+    while True:
+        _, feas = gs.dispatch("strict", 1.0)
+        if not feas:
+            break
+    spill_gids = []
+    for _ in range(6):
+        g, feas = gs.dispatch("strict", 1.0)
+        assert not feas
+        spill_gids.append(g.gid)
+    # spills rotate over ALL prefill/mixed groups, not just the tier's
+    assert set(spill_gids) == {0, 1, 2}
+    assert spill_gids[:3] == spill_gids[3:]  # stable round-robin order
+    # spilled (infeasible) work never commits bandwidth
+    assert total_committed(gs) == pytest.approx(5.0)
+
+
+def test_background_round_robin_independent():
+    gs = GlobalScheduler(mk_groups())
+    gids = [gs.dispatch("strict", 0.5, background=True)[0].gid for _ in range(6)]
+    assert set(gids) == {0, 1, 2}
+    assert total_committed(gs) == pytest.approx(0.0)
+
+
+def test_replace_groups_preserves_commitments():
+    gs = GlobalScheduler(mk_groups())
+    g, feas = gs.dispatch("strict", 1.5)
+    assert feas
+    kept_gid = g.gid
+    # reconfiguration: one group survives (same gid), others are rebuilt
+    new = [
+        GroupHandle(kept_gid, "strict", "prefill", 4, max_rps=6.0),
+        GroupHandle(7, "relaxed", "prefill", 4, max_rps=6.0),
+    ]
+    gs.replace_groups(new)
+    assert gs.groups[kept_gid].committed_rps == pytest.approx(1.5)
+    assert gs.groups[7].committed_rps == 0.0
+    # completing the in-flight request still releases the bandwidth
+    gs.complete(kept_gid, 1.5)
+    assert gs.groups[kept_gid].committed_rps == pytest.approx(0.0)
+
+
+def test_dispatch_prefers_least_relative_load():
+    gs = GlobalScheduler([
+        GroupHandle(0, "strict", "prefill", 2, max_rps=10.0),
+        GroupHandle(1, "strict", "prefill", 2, max_rps=10.0),
+    ])
+    gids = [gs.dispatch("strict", 1.0)[0].gid for _ in range(4)]
+    # alternates between the two equally-sized groups
+    assert sorted(gids[:2]) == [0, 1] and sorted(gids[2:]) == [0, 1]

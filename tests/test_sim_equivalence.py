@@ -1,0 +1,54 @@
+"""Event-engine vs fluid-reference equivalence (docs/simulator.md §Parity).
+
+The event-driven engine must reproduce the fluid-tick reference's goodput
+within 2% relative tolerance per policy on seeded workloads — this is the
+acceptance gate for replacing the fluid loop as the default engine.
+"""
+import pytest
+
+from repro.configs import get_config
+from repro.profiles.perf_model import PerfModel
+from repro.profiles.slo import derive_tiers
+from repro.testing.sim_equivalence import check_equivalence, compare_engines
+from repro.traces.servegen import servegen_two_tier
+
+
+@pytest.fixture(scope="module")
+def perf():
+    return PerfModel(get_config("llama3-8b"))
+
+
+@pytest.fixture(scope="module")
+def tiers(perf):
+    return derive_tiers(perf, prompt_len=900, ctx_len=1000)
+
+
+def test_engines_equivalent_nitsum_sglang(perf, tiers):
+    wl = servegen_two_tier(horizon_s=60.0, seed=0)
+    results = check_equivalence(perf, tiers, 16, wl,
+                                systems=("nitsum", "sglang"), rtol=0.02)
+    for r in results:
+        assert r.finished_event > 0 and r.finished_fluid > 0
+        # both engines must complete the same request population
+        assert abs(r.finished_event - r.finished_fluid) <= max(
+            2, 0.02 * r.finished_fluid
+        ), r.summary()
+
+
+@pytest.mark.slow
+def test_engines_equivalent_all_baselines(perf, tiers):
+    wl = servegen_two_tier(horizon_s=60.0, seed=1)
+    check_equivalence(
+        perf, tiers, 16, wl,
+        systems=("sglang-pd", "sglang-slo", "split", "llumnix", "chiron",
+                 "oracle"),
+        rtol=0.02,
+    )
+
+
+@pytest.mark.slow
+def test_equivalence_across_load_levels(perf, tiers):
+    for scale in (0.5, 2.0):
+        wl = servegen_two_tier(horizon_s=45.0, seed=2, rps_scale=scale)
+        r = compare_engines("nitsum", perf, tiers, 16, wl)
+        assert r.within(0.02), (scale, r.summary())

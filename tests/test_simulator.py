@@ -7,9 +7,25 @@ from repro.profiles.perf_model import PerfModel
 from repro.profiles.slo import derive_tiers
 from repro.serving.global_scheduler import GlobalScheduler, GroupHandle
 from repro.serving.local_scheduler import LocalScheduler
-from repro.serving.simulator import run_system
+from repro.serving.simulator import (
+    DecodeBatch,
+    PrefillQueue,
+    SimReq,
+    Simulator,
+    StaticPolicy,
+    prefill_priority,
+    run_system,
+)
 from repro.traces.servegen import servegen_two_tier, servegen_workload
 from repro.traces.azure import azure_two_tier
+from repro.traces.workload import TraceRequest
+
+
+def _req(arrival, background=False, feasible=True, prompt=64, out=32, rid=0):
+    r = SimReq(TraceRequest(rid, "strict", arrival, prompt, out))
+    r.background = background
+    r.feasible = feasible
+    return r
 
 
 @pytest.fixture(scope="module")
@@ -89,6 +105,76 @@ def test_goodput_saturates_not_collapses(perf, tiers):
         _, meter = run_system("nitsum", perf, tiers, 16, wl)
         g.append(meter.goodput(wl.horizon_s))
     assert g[1] > 0.5 * g[0] and g[2] > 0.5 * g[1], g
+
+
+def test_prefill_queue_pop_best_is_order_preserving():
+    """Regression for the seed's rotate(-i)/popleft/rotate(i) selection:
+    removing the best element must leave every other element in its
+    original relative order, for every position of the minimum."""
+    for n in range(1, 9):
+        for best_at in range(n):
+            q = PrefillQueue(priority=False)
+            reqs = []
+            for i in range(n):
+                # make exactly one element (at position best_at) feasible
+                # foreground — it must win regardless of position
+                r = _req(arrival=float(i), background=(i != best_at), rid=i)
+                reqs.append(r)
+                q.append(r)
+            got = q.pop_best()
+            assert got is reqs[best_at]
+            remaining = [r.tr.req_id for r in q]
+            expect = [i for i in range(n) if i != best_at]
+            assert remaining == expect, (n, best_at, remaining)
+
+
+def test_prefill_queue_priority_mode_pops_in_key_order():
+    q = PrefillQueue(priority=True)
+    rs = [
+        _req(2.0, background=True, rid=0),
+        _req(1.0, feasible=False, rid=1),
+        _req(3.0, rid=2),
+        _req(0.5, rid=3),
+    ]
+    for r in rs:
+        q.append(r)
+    order = [q.pop_best().tr.req_id for _ in range(len(rs))]
+    # feasible foreground FCFS first, then best-effort, then background
+    assert order == [3, 2, 1, 0]
+    assert len(q) == 0
+
+
+def test_decode_batch_invariants():
+    db = DecodeBatch(cap=2)
+    rs = [_req(float(i), rid=i, out=10 + i) for i in range(4)]
+    for r in rs:
+        r.tokens = 1.0
+        db.add(r)
+    # batch = the 2 best-priority (earliest-arrival) requests, rest wait
+    assert db.batch_len == 2 and len(db) == 4
+    assert [r.tr.req_id for r in db.reqs] == [0, 1]
+    db.gain(9.0, 2)  # req0 reaches its output_len of 10
+    assert db.min_remaining(2) == pytest.approx(0.0)
+    fin = db.remove_indices(db.crossers(2))
+    assert [r.tr.req_id for r in fin] == [0]
+    # freed slot refilled from the waiting heap in priority order
+    assert [r.tr.req_id for r in db.reqs] == [1, 2]
+    # waiting requests never gained tokens
+    assert rs[3].tokens == 1.0
+    # a high-priority newcomer displaces the worst batch member
+    vip = _req(0.1, rid=9)
+    assert db.add(vip) is True
+    assert [r.tr.req_id for r in db.reqs] == [9, 1]
+    out = db.clear()  # batch [9, 1] + waiting [2, 3]
+    assert len(out) == 4 and len(db) == 0
+
+
+def test_decode_cap_is_a_method(perf, tiers):
+    policy = StaticPolicy(perf, tiers, tp=2)
+    sim = Simulator(perf, tiers, 4, policy)
+    spec = sim.policy.initial_specs(sim)[0]
+    assert sim.decode_cap(spec) == policy.decode_cap(sim, spec)
+    assert type(Simulator.decode_cap).__name__ == "function"
 
 
 def test_planner_scales_to_128_chips(perf, tiers):
