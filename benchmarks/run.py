@@ -23,6 +23,7 @@ MODULES = [
     "fig16_17_sensitivity",
     "sched_throughput",
     "sim_throughput",
+    "kv_backpressure",
     "roofline_table",
 ]
 

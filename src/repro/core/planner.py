@@ -144,15 +144,29 @@ class Planner:
         )
         if ck in self._cand_cache:
             return self._cand_cache[ck]
+        # KV feasibility: a candidate's decode stage must hold at least one
+        # sequence at the demand's END-of-decode context (prompt + output) —
+        # max_decode_rps only checks memory at the prompt length, which
+        # overstates capacity exactly in the long-context regime where KV
+        # backpressure matters.
+        end_ctx = d.prompt_len + d.output_len
+
+        def _kv_feasible(tp_d: int) -> bool:
+            return self.perf.max_decode_batch(end_ctx, tp_d, 1e9) >= 1
+
         entries = []
         for tp_p, tp_d in itertools.product(self.candidate_tps, repeat=2):
             if tp_p + tp_d > total_chips:
+                continue
+            if not _kv_feasible(tp_d):
                 continue
             ge, thp, thd = self.goodput_efficiency(tier, d, tp_p, tp_d)
             if ge > 0:
                 entries.append((ge, tp_p, tp_d, thp, thd, "disagg"))
         for tp in self.candidate_tps:
             if tp > total_chips:
+                continue
+            if not _kv_feasible(tp):
                 continue
             thp, thd = self.stage_throughputs(tier, d, tp, tp)
             if thp <= 0 or thd <= 0:

@@ -73,9 +73,10 @@ def _max_prefill_rps_cached(
 
 @lru_cache(maxsize=1 << 16)
 def _max_decode_batch_cached(
-    pm: "PerfModel", ctx_len: float, tp: int, tpot_slo_ms: float
+    pm: "PerfModel", ctx_len: float, tp: int, tpot_slo_ms: float,
+    hbm_free_bytes: Optional[float],
 ) -> int:
-    return pm._max_decode_batch_raw(ctx_len, tp, tpot_slo_ms)
+    return pm._max_decode_batch_raw(ctx_len, tp, tpot_slo_ms, hbm_free_bytes)
 
 
 _CACHING_ENABLED = True
@@ -289,6 +290,22 @@ class PerfModel:
     def tpot_ms(self, batch: int, ctx_len: int, tp: int) -> float:
         return self.decode_step_time_s(batch, ctx_len, tp) * 1e3
 
+    # ---- KV occupancy queries (simulator backpressure) ------------------
+    def kv_capacity_bytes(self, tp: int) -> float:
+        """HBM bytes available for KV cache (+ recurrent state) on a TP-`tp`
+        group after weights, at the same 0.9 utilization ceiling
+        `max_decode_batch` assumes. The simulator's per-group occupancy
+        accounting measures against this capacity."""
+        return max(
+            self.hw.hbm_bytes * tp * 0.9 - self.n_params * self.dtype_bytes, 0.0
+        )
+
+    def seq_kv_bytes(self, ctx_len: float) -> float:
+        """Resident KV + state bytes of one sequence at context `ctx_len`.
+        Sliding-window models cap resident KV at the window."""
+        eff = min(ctx_len, self.cfg.attn.window or ctx_len)
+        return self.kv_bytes_per_token() * eff + self.state_bytes()
+
     # ---- memory feasibility ---------------------------------------------
     def fits(self, tp: int, kv_headroom: float = 0.15) -> bool:
         """Do the weights (+ some KV headroom) fit a TP-`tp` group's HBM?
@@ -336,16 +353,30 @@ class PerfModel:
                 hi = u
         return 0.9 * lo / t_exec
 
-    def max_decode_batch(self, ctx_len: int, tp: int, tpot_slo_ms: float) -> int:
+    def max_decode_batch(
+        self, ctx_len: int, tp: int, tpot_slo_ms: float,
+        hbm_free_bytes: Optional[float] = None,
+    ) -> int:
         """Largest batch a TP-`tp` decode group can run within the TPOT SLO.
 
-        Memoized on a quantized context length (the binary search only
+        ``hbm_free_bytes`` overrides the KV-memory budget (default: all HBM
+        after weights). The simulator passes the group's TOTAL watermarked
+        KV budget (watermark × kv_capacity_bytes), not capacity minus live
+        occupancy — the batch being sized IS the occupancy, so subtracting
+        it would double-count resident sequences. Memoized on a quantized
+        context length and quantized byte budget (the binary search only
         runs on cache misses)."""
         if not _CACHING_ENABLED:
-            return self._max_decode_batch_raw(ctx_len, tp, tpot_slo_ms)
-        return _max_decode_batch_cached(self, quantize_len(ctx_len), tp, tpot_slo_ms)
+            return self._max_decode_batch_raw(ctx_len, tp, tpot_slo_ms, hbm_free_bytes)
+        free_q = None if hbm_free_bytes is None else quantize_len(hbm_free_bytes)
+        return _max_decode_batch_cached(
+            self, quantize_len(ctx_len), tp, tpot_slo_ms, free_q
+        )
 
-    def _max_decode_batch_raw(self, ctx_len: float, tp: int, tpot_slo_ms: float) -> int:
+    def _max_decode_batch_raw(
+        self, ctx_len: float, tp: int, tpot_slo_ms: float,
+        hbm_free_bytes: Optional[float] = None,
+    ) -> int:
         if not self.fits(tp):
             return 0
         lo, hi = 0, 4096
@@ -356,11 +387,12 @@ class PerfModel:
             else:
                 hi = mid - 1
         # KV memory cap
-        kv_per_seq = self.kv_bytes_per_token() * min(
-            ctx_len, self.cfg.attn.window or ctx_len
-        ) + self.state_bytes()
+        kv_per_seq = self.seq_kv_bytes(ctx_len)
         if kv_per_seq > 0:
-            hbm_free = self.hw.hbm_bytes * tp * 0.9 - self.n_params * self.dtype_bytes
+            hbm_free = (
+                self.kv_capacity_bytes(tp)
+                if hbm_free_bytes is None else hbm_free_bytes
+            )
             lo = min(lo, max(int(hbm_free / kv_per_seq), 0))
         return lo
 

@@ -27,6 +27,9 @@ class GroupHandle:
     committed_rps: float = 0.0
     accepts_background: bool = True
     queue_len: int = 0
+    # fraction of the group's KV budget (HBM after weights, below the
+    # simulator's occupancy watermark) still free; 0 = under KV pressure
+    kv_free_frac: float = 1.0
 
     @property
     def available_rps(self) -> float:
@@ -66,6 +69,12 @@ class GlobalScheduler:
 
         tier_groups = self._prefill_groups(tier)
         feas = [g for g in tier_groups if g.available_rps >= rate_cost]
+        # KV backpressure: among bandwidth-feasible groups, avoid those whose
+        # projected KV occupancy is at the watermark (they would stall the
+        # prefill's decode phase); fall back to all if every group is full
+        kv_ok = [g for g in feas if g.kv_free_frac > 0.0]
+        if kv_ok:
+            feas = kv_ok
         if feas:
             g = min(feas, key=lambda g: (g.committed_rps / max(g.max_rps, 1e-9), g.queue_len))
             g.committed_rps += rate_cost

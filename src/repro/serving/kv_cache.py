@@ -11,8 +11,9 @@ Two layouts:
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +36,7 @@ class SlotCache:
     max_len: int
     arrays: dict = None  # pytree: {"pos{i}": {...: (P, B, S, KV, hd)}}
     lengths: np.ndarray = None  # host-side per-slot lengths
-    free: List[int] = None
+    free: Deque[int] = None
 
     @classmethod
     def create(cls, cfg, ec, n_slots, max_len, dtype=jnp.float32):
@@ -43,14 +44,14 @@ class SlotCache:
         arrays = init_params(defs, jax.random.PRNGKey(0), dtype)
         return cls(
             cfg, ec, n_slots, max_len, arrays,
-            np.zeros(n_slots, np.int64), list(range(n_slots)),
+            np.zeros(n_slots, np.int64), deque(range(n_slots)),
         )
 
     def cache_defs(self):
         return init_cache_defs(self.cfg, self.ec, self.n_slots, self.max_len)
 
     def alloc(self) -> Optional[int]:
-        return self.free.pop(0) if self.free else None
+        return self.free.popleft() if self.free else None
 
     def release(self, slot: int) -> None:
         self.lengths[slot] = 0
@@ -73,7 +74,7 @@ class PagedPool:
 
     k_pages: jnp.ndarray = None  # (L, P, page, KV, hd)
     v_pages: jnp.ndarray = None
-    free_pages: List[int] = field(default_factory=list)
+    free_pages: Deque[int] = field(default_factory=deque)
     tables: Dict[int, List[int]] = field(default_factory=dict)  # seq -> pages
     seq_lens: Dict[int, int] = field(default_factory=dict)
 
@@ -83,7 +84,9 @@ class PagedPool:
             self.k_pages = jnp.zeros(shape, self.dtype)
             self.v_pages = jnp.zeros(shape, self.dtype)
         if not self.free_pages:
-            self.free_pages = list(range(self.num_pages))
+            self.free_pages = deque(range(self.num_pages))
+        elif not isinstance(self.free_pages, deque):
+            self.free_pages = deque(self.free_pages)
 
     @property
     def pages_per_seq_max(self) -> int:
@@ -93,7 +96,7 @@ class PagedPool:
         need = -(-n_tokens // self.page_size)
         if len(self.free_pages) < need:
             return False
-        self.tables[seq_id] = [self.free_pages.pop(0) for _ in range(need)]
+        self.tables[seq_id] = [self.free_pages.popleft() for _ in range(need)]
         self.seq_lens[seq_id] = n_tokens
         return True
 
@@ -104,7 +107,7 @@ class PagedPool:
         if need > len(self.free_pages):
             return False
         for _ in range(need):
-            self.tables[seq_id].append(self.free_pages.pop(0))
+            self.tables[seq_id].append(self.free_pages.popleft())
         self.seq_lens[seq_id] = new
         return True
 
@@ -123,7 +126,7 @@ class PagedPool:
         return frag / tot if tot else 0.0
 
     def block_table_array(self, seq_ids: List[int]) -> np.ndarray:
-        width = max(len(self.tables[s]) for s in seq_ids)
+        width = max((len(self.tables[s]) for s in seq_ids), default=0)
         out = np.zeros((len(seq_ids), width), np.int32)
         for i, s in enumerate(seq_ids):
             pg = self.tables[s]

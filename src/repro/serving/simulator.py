@@ -95,13 +95,24 @@ class PrefillQueue:
 
     In both modes removing the selected element preserves the relative
     order of everything left behind (regression: test_prefill_queue_*).
+
+    ``prompt_tokens`` maintains the sum of queued prompt lengths in O(1):
+    the KV backpressure check projects a group's occupancy as (live KV +
+    queued prompts) without scanning the queue. ``kv_clamp`` caps each
+    prompt's contribution (sliding-window models hold at most `window`
+    KV tokens per sequence).
     """
 
-    __slots__ = ("_priority", "_q", "_heap", "_ctr")
+    __slots__ = ("_priority", "_q", "_heap", "_ctr", "_kv_clamp", "prompt_tokens")
 
-    def __init__(self, priority: bool = False, items: Sequence[SimReq] = ()):
+    def __init__(
+        self, priority: bool = False, items: Sequence[SimReq] = (),
+        kv_clamp: float = math.inf,
+    ):
         self._priority = priority
         self._ctr = count()
+        self._kv_clamp = kv_clamp
+        self.prompt_tokens = sum(min(r.tr.prompt_len, kv_clamp) for r in items)
         if priority:
             self._q = None
             self._heap = [(prefill_priority(r), next(self._ctr), r) for r in items]
@@ -111,28 +122,37 @@ class PrefillQueue:
             self._heap = None
 
     def append(self, r: SimReq) -> None:
+        self.prompt_tokens += min(r.tr.prompt_len, self._kv_clamp)
         if self._priority:
             heapq.heappush(self._heap, (prefill_priority(r), next(self._ctr), r))
         else:
             self._q.append(r)
 
     def popleft(self) -> SimReq:
-        if self._priority:
-            return heapq.heappop(self._heap)[2]
-        return self._q.popleft()
+        r = (
+            heapq.heappop(self._heap)[2] if self._priority else self._q.popleft()
+        )
+        self.prompt_tokens -= min(r.tr.prompt_len, self._kv_clamp)
+        return r
 
     def pop(self) -> SimReq:
         """Tail pop (queue-migration policies; FCFS mode only)."""
-        return self._q.pop()
+        r = self._q.pop()
+        self.prompt_tokens -= min(r.tr.prompt_len, self._kv_clamp)
+        return r
 
     def pop_best(self) -> SimReq:
         """Remove and return the highest-priority request, preserving the
         order of the remaining queue."""
         if self._priority:
-            return heapq.heappop(self._heap)[2]
-        best_i = min(range(len(self._q)), key=lambda i: prefill_priority(self._q[i]))
-        r = self._q[best_i]
-        del self._q[best_i]
+            r = heapq.heappop(self._heap)[2]
+        else:
+            best_i = min(
+                range(len(self._q)), key=lambda i: prefill_priority(self._q[i])
+            )
+            r = self._q[best_i]
+            del self._q[best_i]
+        self.prompt_tokens -= min(r.tr.prompt_len, self._kv_clamp)
         return r
 
     def resort(self, key) -> None:
@@ -147,6 +167,7 @@ class PrefillQueue:
             self._heap.clear()
         else:
             self._q.clear()
+        self.prompt_tokens = 0
         return out
 
     def __len__(self) -> int:
@@ -283,6 +304,24 @@ class DecodeBatch:
         self._insert(k, r)
         return True
 
+    def set_cap(self, cap: int) -> bool:
+        """Resize the running batch bound (dynamic KV-occupancy caps).
+        Shrinking evicts the worst-priority members to the waiting heap;
+        growing promotes waiters. Returns True iff membership changed."""
+        cap = max(int(cap), 1)
+        if cap == self.cap:
+            return False
+        self.cap = cap
+        changed = False
+        while self._n > cap:
+            self._evict_last()
+            changed = True
+        while self._wait and self._n < cap:
+            k, _, r = heapq.heappop(self._wait)
+            self._insert(k, r)
+            changed = True
+        return changed
+
     def remove_indices(self, idx) -> List[SimReq]:
         """Remove (sorted ascending) batch positions; returns the removed
         requests with their tokens synced back. Freed slots are refilled
@@ -377,18 +416,34 @@ class Group:
     __slots__ = (
         "gid", "spec", "sim", "prefill_q", "cur", "decode", "blocked_until",
         "batch_cap", "t_sync", "_epoch", "_ev_kind", "_step", "_batch_n",
-        "_decode_active",
+        "_decode_active", "kv_tokens", "kv_seqs", "kv_capacity_bytes",
+        "_static_cap", "_kv_win",
     )
 
     def __init__(self, gid: int, spec: GroupSpec, sim: "Simulator"):
         self.gid = gid
         self.spec = spec
         self.sim = sim
-        self.prefill_q = PrefillQueue(priority=sim.policy.slo_aware_prefill)
+        # sliding-window models hold at most `window` KV tokens per seq;
+        # occupancy charges are clamped consistently with seq_kv_bytes
+        self._kv_win = sim.perf.cfg.attn.window or math.inf
+        self.prefill_q = PrefillQueue(
+            priority=sim.policy.slo_aware_prefill, kv_clamp=self._kv_win
+        )
         self.cur: Optional[SimReq] = None
         self.blocked_until: float = 0.0
         self.batch_cap = sim.decode_cap(spec)
+        self._static_cap = self.batch_cap  # cap at the CTX_REF design point
         self.decode = DecodeBatch(self.batch_cap)
+        # --- live KV occupancy (docs/simulator.md §KV occupancy) ---
+        # kv_tokens: tokens resident on this group's HBM — every decode
+        # request's ctx (batch AND waiting; waiters hold KV without gaining)
+        # plus the in-flight prefill's prompt, charged up-front at prefill
+        # start. kv_seqs counts the resident sequences (recurrent-state
+        # charge). Invariant (kv_audit): kv_tokens == sum of those charges.
+        self.kv_tokens: float = 0.0
+        self.kv_seqs: int = 0
+        self.kv_capacity_bytes: float = sim.perf.kv_capacity_bytes(spec.tp)
         # --- event-engine state ---
         self.t_sync: float = sim.now  # decode/prefill integrated up to here
         self._epoch: int = 0  # invalidates stale heap entries
@@ -396,6 +451,67 @@ class Group:
         self._step: float = 0.0  # decode step time held over the interval
         self._batch_n: int = 0
         self._decode_active: bool = False
+
+    # ---- KV occupancy ------------------------------------------------
+    def _kv_charge(self, tokens: float, seqs: int) -> None:
+        self.kv_tokens += tokens
+        self.kv_seqs += seqs
+
+    def _kv_ctx(self, r: SimReq) -> float:
+        """The request's charged KV tokens: window-clamped prompt plus
+        generated tokens (generation growth is charged unclamped — for
+        sliding-window models this overstates residency by at most the
+        tokens generated beyond the window, a conservative error bounded
+        by the output length)."""
+        p = r.tr.prompt_len
+        return (p if p < self._kv_win else self._kv_win) + r.tokens
+
+    def kv_bytes(self) -> float:
+        perf = self.sim.perf
+        return (
+            perf.kv_bytes_per_token() * self.kv_tokens
+            + perf.state_bytes() * self.kv_seqs
+        )
+
+    def kv_projected_bytes(self) -> float:
+        """Occupancy once every queued prefill has been admitted — the
+        quantity the admission watermark is checked against."""
+        perf = self.sim.perf
+        q = self.prefill_q
+        return self.kv_bytes() + (
+            perf.kv_bytes_per_token() * q.prompt_tokens
+            + perf.state_bytes() * len(q)
+        )
+
+    def refresh_cap(self) -> bool:
+        """Re-derive the decode batch cap from the batch's current mean
+        context and the group's KV budget; returns True iff batch
+        membership changed. Called by both engines before each decode
+        step-time evaluation. Fast path: at or below the CTX_REF design
+        point the dynamic memory term never binds (decode_cap returns the
+        static cap), so the policy call is skipped entirely — the hot
+        short-context replay pays two comparisons per event."""
+        decode = self.decode
+        b = decode.batch_len
+        sim = self.sim
+        if not b or decode.mean_ctx(b) <= sim.policy.CTX_REF:
+            cap = self._static_cap
+        else:
+            cap = sim.decode_cap(self.spec, self)
+        if cap == self.batch_cap:
+            return False
+        self.batch_cap = cap
+        return self.decode.set_cap(cap)
+
+    def _start_prefill(self) -> SimReq:
+        """Pop the next prefill, charge its KV up-front, set it running."""
+        r = self._next_prefill()
+        r.prefill_left_s = self.sim.perf.prefill_time_s(
+            r.tr.prompt_len, self.spec.tp
+        )
+        self.cur = r
+        self._kv_charge(min(r.tr.prompt_len, self._kv_win), 1)
+        return r
 
     @property
     def decoding(self) -> List[SimReq]:
@@ -421,6 +537,8 @@ class Group:
         if self.cur is not None:
             out.append(self.cur)
         self.cur = None
+        self.kv_tokens = 0.0
+        self.kv_seqs = 0
         return out
 
     def add_decode(self, r: SimReq) -> bool:
@@ -447,10 +565,7 @@ class Group:
                 if self.cur is None:
                     if not self.prefill_q:
                         break
-                    self.cur = self._next_prefill()
-                    self.cur.prefill_left_s = self.sim.perf.prefill_time_s(
-                        self.cur.tr.prompt_len, self.spec.tp
-                    )
+                    self._start_prefill()
                 take = min(budget, self.cur.prefill_left_s)
                 self.cur.prefill_left_s -= take
                 budget -= take
@@ -459,10 +574,13 @@ class Group:
                     self.cur = None
         # ---- decode ----
         if self.spec.stage in ("decode", "mixed") and len(self.decode) and budget > 1e-12:
+            self.refresh_cap()
             b = self.decode.batch_len
             ctx = self.decode.mean_ctx(b)
             step = self.sim.perf.decode_step_time_s(b, ctx, self.spec.tp)
-            for r in self.decode.advance_fluid(budget / step, b):
+            gain = budget / step
+            self._kv_charge(gain * b, 0)  # batch members' ctx grows
+            for r in self.decode.advance_fluid(gain, b):
                 r.finish_s = now + dt
                 self.sim.on_finish(r)
 
@@ -483,7 +601,9 @@ class Group:
         if self.spec.stage in ("prefill", "mixed") and self.cur is not None:
             self.cur.prefill_left_s = max(self.cur.prefill_left_s - dt, 0.0)
         elif self._decode_active and len(self.decode):
-            self.decode.gain(dt / self._step, self._batch_n)
+            gain = dt / self._step
+            self.decode.gain(gain, self._batch_n)
+            self._kv_charge(gain * self._batch_n, 0)
         self.t_sync = t
 
     def arm(self) -> float:
@@ -503,13 +623,12 @@ class Group:
         if stage != "decode":  # prefill | mixed
             cur = self.cur
             if cur is None and self.prefill_q:
-                cur = self.cur = self._next_prefill()
-                cur.prefill_left_s = self.sim.perf.prefill_time_s(
-                    cur.tr.prompt_len, self.spec.tp
-                )
+                cur = self._start_prefill()
             if cur is not None:
                 self._ev_kind = "prefill"
                 return base + cur.prefill_left_s
+        if stage != "prefill" and decode.batch_len:
+            self.refresh_cap()
         b = decode.batch_len
         if b and stage != "prefill":  # decode | mixed
             ctx = decode.mean_ctx(b)
@@ -542,17 +661,53 @@ class Policy:
         self.tiers = {t.name: t for t in tiers}
         self.tps = tuple(candidate_tps)
 
-    def decode_cap(self, sim: "Simulator", spec: "GroupSpec") -> int:
+    # decode caps are designed at a fixed reference context: the TPOT term
+    # must not drift with the live batch (the planner sizes groups at this
+    # exact boundary), while the memory term IS dynamic (decode_cap below)
+    CTX_REF = 2048
+
+    def _cap_tpot_ms(self, spec: "GroupSpec") -> float:
         if not self.slo_aware_batching:
-            # SLO-agnostic engines batch to the memory limit
-            return max(self.perf.max_decode_batch(2048, spec.tp, 1e9), 1)
+            return 1e9  # SLO-agnostic engines batch to the memory limit
         tpot = None
         for t in self.tiers.values():
             if spec.tier in (None, t.name) and not t.background:
-                tpot = t.tpot_ms if tpot is None else max(tpot, t.tpot_ms)
-        if tpot is None:
-            tpot = 1e9
-        return max(self.perf.max_decode_batch(2048, spec.tp, tpot), 1)
+                # a shared group may serve EVERY compatible tier, so the
+                # batch must be sized for the strictest (min) TPOT — the
+                # loosest (max) let relaxed-tier batches blow the strict
+                # tier's TPOT SLO
+                tpot = t.tpot_ms if tpot is None else min(tpot, t.tpot_ms)
+        return 1e9 if tpot is None else tpot
+
+    def decode_cap(
+        self, sim: "Simulator", spec: "GroupSpec", group: Optional["Group"] = None
+    ) -> int:
+        tpot = self._cap_tpot_ms(spec)
+        cap = self.perf.max_decode_batch(self.CTX_REF, spec.tp, tpot)
+        if group is not None and self.perf.kv_bytes_per_token() > 0:
+            # dynamic memory term: how many sequences at the batch's CURRENT
+            # mean context fit the group's watermarked KV budget, minus the
+            # bytes held by NON-batch residents (waiting-heap members and
+            # the in-flight prefill keep their KV while evicted from the
+            # batch). Batch members' own bytes stay in the budget — the
+            # batch being sized IS that part of the occupancy — so they are
+            # not double-counted. Long contexts shrink the admissible batch
+            # far below the static CTX_REF headroom.
+            b = group.decode.batch_len
+            ctx = group.decode.mean_ctx(b) if b else float(self.CTX_REF)
+            if ctx > self.CTX_REF:
+                batch_bytes = b * self.perf.seq_kv_bytes(ctx)
+                non_batch = max(group.kv_bytes() - batch_bytes, 0.0)
+                budget = max(
+                    sim.kv_watermark * group.kv_capacity_bytes - non_batch, 0.0
+                )
+                cap = min(
+                    cap,
+                    self.perf.max_decode_batch(
+                        ctx, spec.tp, 1e9, hbm_free_bytes=budget
+                    ),
+                )
+        return max(cap, 1)
 
     def estimate_specs(self, sim: "Simulator", specs) -> float:
         """Estimated SLO-served rps of a group layout under current demand.
@@ -619,7 +774,15 @@ class Policy:
         ]
         if not cands:
             return frm
-        return min(cands, key=lambda g: len(g.decode))
+        # KV-aware tiebreak: a group already at its occupancy watermark only
+        # receives the hand-off when every alternative is also full (on
+        # short-context traces no group is ever full, so the order reduces
+        # to the plain least-loaded choice)
+        wm = sim.kv_watermark
+        return min(
+            cands,
+            key=lambda g: (g.kv_bytes() >= wm * g.kv_capacity_bytes, len(g.decode)),
+        )
 
 
 class StaticPolicy(Policy):
@@ -868,27 +1031,25 @@ class NitsumPolicy(Policy):
         return new
 
     def switch_cost_s(self, sim, group: Group) -> float:
-        # KV bytes resident on the group that must migrate
-        kv_bytes = sum(
-            self.perf.kv_bytes_per_token() * r.ctx + self.perf.state_bytes()
-            for r in group.decoding
-        )
+        # KV bytes resident on the group that must migrate (window-clamped,
+        # consistent with the occupancy accounting)
+        kv_bytes = sum(self.perf.seq_kv_bytes(r.ctx) for r in group.decoding)
         if self.fast_switch:
             return self.mig.pipelined_s(max(kv_bytes, 1.0))
         # straw-man: full weight reload (~1 GB/s from host) + per-page copies
-        reload_s = self.perf.n_params * 2 / 1e9
+        reload_s = self.perf.n_params * self.perf.dtype_bytes / 1e9
         return reload_s + self.mig.naive_per_page_s(max(kv_bytes, 1.0))
 
     def _sync_demand_sig(self, sim) -> tuple:
         """Change signature for the scheduler's profiled-bandwidth inputs:
-        the group set plus each tier's window-mean prompt length, bucketed
-        at 2% so per-arrival jitter of the mean does not force a full
-        handle rebuild (max_rps staleness is bounded by the bucket).
-        Reads the rolling sums directly — this runs on every arrival."""
+        each tier's window-mean prompt length, bucketed at 2% so per-arrival
+        jitter of the mean does not force a bandwidth refresh (max_rps
+        staleness is bounded by the bucket). Reads the rolling sums
+        directly — this runs on every arrival."""
         sim._recent_expire()
         sums = sim._tier_sums
         log = math.log
-        sig = [sim._groups_ver]
+        sig = []
         tot_n = tot_sp = 0
         for tier in self.tiers:
             st = sums.get(tier)
@@ -901,35 +1062,46 @@ class NitsumPolicy(Policy):
         sig.append(round(log(max(tot_sp / tot_n, 1.0)) * 50) if tot_n else -1)
         return tuple(sig)
 
+    def _handle_max_rps(self, sim, g: Group) -> float:
+        tier = g.spec.tier
+        t = self.tiers.get(tier) if tier else None
+        d = sim.tier_stats(tier) if tier else sim.tier_stats(None)
+        if t is not None:
+            return self.perf.max_prefill_rps(d.prompt_len, g.spec.tp, t.ttft_ms)
+        return self.perf.max_prefill_rps(d.prompt_len, g.spec.tp, 10_000.0)
+
     def _sync_scheduler(self, sim) -> None:
-        sig = self._sync_demand_sig(sim)
+        """Incremental scheduler view (ROADMAP): GroupHandles are rebuilt
+        ONLY when the group set itself changes (reconfiguration bumps
+        `sim._groups_ver`); demand drift refreshes `max_rps` on the existing
+        handles in place, and the per-arrival dynamic fields (queue_len, KV
+        headroom) are plain in-place writes."""
         gs = self.gs
-        if gs is not None and getattr(self, "_sync_sig", None) == sig:
-            # bandwidth profile unchanged: refresh only the load tiebreak
+        sig = self._sync_demand_sig(sim)
+        if gs is None or getattr(self, "_sync_ver", None) != sim._groups_ver:
+            handles = [
+                GroupHandle(
+                    g.gid, g.spec.tier, g.spec.stage, g.spec.tp,
+                    self._handle_max_rps(sim, g), queue_len=g.queue_len,
+                )
+                for g in sim.groups
+            ]
+            if gs is None:
+                self.gs = gs = GlobalScheduler(handles)
+            else:
+                gs.replace_groups(handles)
+            self._sync_ver = sim._groups_ver
+            self._sync_sig = sig
+        elif sig != getattr(self, "_sync_sig", None):
             gsg = gs.groups
             for g in sim.groups:
-                gsg[g.gid].queue_len = g.queue_len
-            return
-        handles = []
+                gsg[g.gid].max_rps = self._handle_max_rps(sim, g)
+            self._sync_sig = sig
+        gsg = gs.groups
         for g in sim.groups:
-            tier = g.spec.tier
-            t = self.tiers.get(tier) if tier else None
-            d = sim.tier_stats(tier) if tier else sim.tier_stats(None)
-            max_rps = (
-                self.perf.max_prefill_rps(d.prompt_len, g.spec.tp, t.ttft_ms)
-                if t is not None
-                else self.perf.max_prefill_rps(d.prompt_len, g.spec.tp, 10_000.0)
-            )
-            h = GroupHandle(
-                g.gid, tier, g.spec.stage, g.spec.tp, max_rps,
-                queue_len=g.queue_len,
-            )
-            handles.append(h)
-        if gs is None:
-            self.gs = GlobalScheduler(handles)
-        else:
-            gs.replace_groups(handles)
-        self._sync_sig = sig
+            h = gsg[g.gid]
+            h.queue_len = g.queue_len
+            h.kv_free_frac = sim.kv_free_frac(g)
 
     def route(self, sim, req: SimReq) -> Group:
         if not self.slo_aware:
@@ -992,6 +1164,24 @@ class OraclePolicy(Policy):
 # ===========================================================================
 # Simulator
 # ===========================================================================
+@dataclass
+class SimResult:
+    """Summary of one simulated replay (what benchmarks/tests consume)."""
+
+    policy: str
+    goodput: float
+    per_tier_goodput: Dict[str, float]
+    spills: Dict[str, int]  # per-tier KV-backpressure admission spills
+    finished: int
+    reconfig_count: int
+    timeline: List[Tuple[float, float]]
+    spill_timeline: List[Tuple[float, int]]
+
+    @property
+    def spill_total(self) -> int:
+        return sum(self.spills.values())
+
+
 class Simulator:
     def __init__(
         self,
@@ -1005,6 +1195,8 @@ class Simulator:
         engine: str = "event",
         ctx_refresh_frac: float = 0.02,
         grid_parity: bool = True,
+        kv_watermark: float = 0.9,
+        kv_audit: bool = False,
     ):
         if engine not in ("event", "fluid"):
             raise ValueError(f"unknown engine {engine!r}")
@@ -1017,6 +1209,13 @@ class Simulator:
         self.monitor_window_s = monitor_window_s
         self.engine = engine
         self.ctx_refresh_frac = ctx_refresh_frac
+        # KV admission backpressure: a prefill is spilled (re-routed, or
+        # demoted to best-effort when no group has headroom) when its
+        # target's projected occupancy would cross kv_watermark × capacity
+        self.kv_watermark = kv_watermark
+        self.kv_audit = kv_audit
+        self.spill_counts: Dict[str, int] = {t.name: 0 for t in tiers}
+        self.spill_timeline: List[Tuple[float, int]] = []
         # grid parity (event engine only): admit arrivals and stamp decode
         # finishes on the fluid engine's dt grid, so the two engines differ
         # only by the analytic-integration error, not by discretization
@@ -1046,9 +1245,23 @@ class Simulator:
         self._seq = count()
 
     # ---- bookkeeping ---------------------------------------------------
-    def decode_cap(self, spec: GroupSpec) -> int:
-        """Decode batch cap for a group spec (delegates to the policy)."""
-        return self.policy.decode_cap(self, spec)
+    def decode_cap(self, spec: GroupSpec, group: Optional[Group] = None) -> int:
+        """Decode batch cap for a group spec (delegates to the policy).
+        With ``group``, the cap also reflects the group's live KV occupancy
+        and the batch's current mean context."""
+        return self.policy.decode_cap(self, spec, group)
+
+    def result(self, horizon_s: float) -> SimResult:
+        return SimResult(
+            policy=self.policy.name,
+            goodput=self.meter.goodput(horizon_s),
+            per_tier_goodput=self.meter.per_tier_goodput(horizon_s),
+            spills=dict(self.spill_counts),
+            finished=len(self.finished),
+            reconfig_count=self.reconfig_count,
+            timeline=list(self.timeline),
+            spill_timeline=list(self.spill_timeline),
+        )
 
     def group_by_id(self, gid: int) -> Group:
         g = self._by_gid.get(gid)
@@ -1135,10 +1348,12 @@ class Simulator:
             if r.tokens > 0 or r.first_token_s is not None:
                 tgt = self.policy.decode_target(self, r, self.groups[0])
                 tgt.add_decode(r)
+                tgt._kv_charge(tgt._kv_ctx(r), 1)  # KV migrated with the request
                 tgt.blocked_until = max(
                     tgt.blocked_until, self.now + r._penalty
                 )
             else:
+                # queued/in-flight prefills restart from scratch: no KV yet
                 tgt = self.policy.route(self, r)
                 tgt.prefill_q.append(r)
             r.group = tgt
@@ -1147,6 +1362,8 @@ class Simulator:
     def on_prefill_done(self, req: SimReq, group: Group, t: float) -> None:
         req.first_token_s = t
         req.tokens = 1.0
+        req.group = group
+        group._kv_charge(1.0, 0)  # the first generated token's KV
         if req.dispatch_gid is not None and isinstance(self.policy, NitsumPolicy):
             if self.policy.gs is not None:
                 self.policy.gs.complete(req.dispatch_gid, req.rate_cost)
@@ -1155,6 +1372,12 @@ class Simulator:
             self.on_finish(req)
             return
         tgt = self.policy.decode_target(self, req, group)
+        if tgt is not group:
+            # KV migrates with the request (pipelined; the switch-cost
+            # model charges reconfiguration migrations, not hand-offs)
+            ctx = group._kv_ctx(req)
+            group._kv_charge(-ctx, -1)
+            tgt._kv_charge(ctx, 1)
         if self.engine == "event" and tgt is not group:
             tgt.advance_to(self.now)
             touched = tgt.add_decode(req)
@@ -1169,6 +1392,9 @@ class Simulator:
         req.group = tgt
 
     def on_finish(self, req: SimReq) -> None:
+        if req.group is not None:
+            g = req.group
+            g._kv_charge(-g._kv_ctx(req), -1)  # release the sequence's KV
         self.finished.append(req)
         rec = RequestRecord(
             req.tr.req_id, req.tr.tier, req.tr.arrival_s, req.tr.prompt_len,
@@ -1197,10 +1423,68 @@ class Simulator:
         self._apply_specs(self.policy.initial_specs(self), charge_cost=False)
         return sorted(workload.requests, key=lambda r: r.arrival_s)
 
+    # ---- KV admission backpressure ---------------------------------------
+    def kv_free_frac(self, g: Group) -> float:
+        """Fraction of the group's watermarked KV budget still free after
+        projecting queued prefills."""
+        budget = self.kv_watermark * g.kv_capacity_bytes
+        if budget <= 0:
+            return 0.0
+        return max(budget - g.kv_projected_bytes(), 0.0) / budget
+
+    def _kv_backpressure(self, req: SimReq, g: Group) -> Group:
+        """Admission control at arrival: if the routed group's projected
+        occupancy (live KV + queued prompts + this prompt) crosses the
+        watermark, the prefill spills — re-routed to the compatible group
+        with the most projected headroom, or, when every group is at the
+        watermark, demoted to best-effort so it sinks in the priority
+        queue. Either way the per-tier spill counter increments."""
+        perf = self.perf
+        if perf.kv_bytes_per_token() <= 0 and perf.state_bytes() <= 0:
+            return g  # O(1)-state model: no KV pressure to model
+        # window-clamped, consistent with the capacity model and the
+        # occupancy charges
+        need = perf.seq_kv_bytes(req.tr.prompt_len)
+        if self.engine == "event":
+            g.advance_to(self.now)  # occupancy integrated up to the arrival
+        if g.kv_projected_bytes() + need <= self.kv_watermark * g.kv_capacity_bytes:
+            return g
+        self.spill_counts[req.tr.tier] = self.spill_counts.get(req.tr.tier, 0) + 1
+        tier = req.tr.tier
+        best, best_free = None, 0.0
+        for cand in self.groups:
+            if cand is g or cand.spec.stage not in ("prefill", "mixed"):
+                continue
+            if cand.spec.tier not in (None, tier):
+                continue
+            if self.engine == "event":
+                cand.advance_to(self.now)
+            free = (
+                self.kv_watermark * cand.kv_capacity_bytes
+                - cand.kv_projected_bytes()
+            )
+            if free >= need and free > best_free:
+                best, best_free = cand, free
+        if best is not None:
+            # keep the global scheduler's bandwidth view consistent with
+            # the actual placement: move the dispatch commitment (and the
+            # completion target) from the original group to the new one
+            gs = getattr(self.policy, "gs", None)
+            if gs is not None and req.dispatch_gid == g.gid:
+                gs.complete(g.gid, req.rate_cost)
+                h = gs.groups.get(best.gid)
+                if h is not None:
+                    h.committed_rps += req.rate_cost
+                req.dispatch_gid = best.gid
+            return best
+        req.feasible = False  # no headroom anywhere: best-effort spill
+        return g
+
     def _admit(self, tr: TraceRequest) -> None:
         self._recent_push(tr)
         req = SimReq(tr, background=tr.tier in self._bg_tiers)
         g = self.policy.route(self, req)
+        g = self._kv_backpressure(req, g)
         if self.engine == "event" and g._ev_kind not in ("prefill", "unblock"):
             # an armed prefill/unblock event is unaffected by a queue append;
             # otherwise (idle, or decoding that prefill now preempts) re-arm
@@ -1229,9 +1513,14 @@ class Simulator:
             self._recent_expire()
             for g in self.groups:
                 g.tick(self.now, self.dt)
+            if self.kv_audit:
+                self._kv_audit_check()
             self.now += self.dt
             if self.now >= next_second:
                 self.timeline.append((self.now, self._win_good / 1.0))
+                self.spill_timeline.append(
+                    (self.now, sum(self.spill_counts.values()))
+                )
                 self._win_good = 0
                 next_second += 1.0
             if self.now >= next_window:
@@ -1284,6 +1573,28 @@ class Simulator:
                     self.on_finish(r)
             # else: context-drift refresh — re-arm recomputes the step
         self._schedule_group(g)
+        if self.kv_audit:
+            self._kv_audit_check()
+
+    def _kv_audit_check(self) -> None:
+        """Conservation invariant (tests/test_kv_occupancy.py): per group,
+        tokens admitted − released == live occupancy, i.e. the tracked
+        counters equal a fresh scan of resident requests."""
+        for g in self.groups:
+            g.decode.sync()
+            toks, seqs = 0.0, 0
+            for r in g.decode:
+                toks += g._kv_ctx(r)
+                seqs += 1
+            if g.cur is not None:
+                toks += g._kv_ctx(g.cur)
+                seqs += 1
+            if seqs != g.kv_seqs or abs(toks - g.kv_tokens) > 0.5 + 1e-5 * toks:
+                raise AssertionError(
+                    f"KV occupancy drift on group {g.gid} at t={self.now:.3f}: "
+                    f"tracked ({g.kv_tokens:.2f} tok, {g.kv_seqs} seqs) != "
+                    f"live ({toks:.2f} tok, {seqs} seqs)"
+                )
 
     def _window_boundary(self) -> None:
         if type(self.policy).window is Policy.window:
@@ -1337,6 +1648,7 @@ class Simulator:
             if t >= next_second:
                 self._recent_expire()  # static policies never query stats
                 self.timeline.append((t, self._win_good / 1.0))
+                self.spill_timeline.append((t, sum(self.spill_counts.values())))
                 self._win_good = 0
                 next_second += 1.0
             if t >= next_window:
@@ -1357,6 +1669,8 @@ def run_system(
     workload: Workload,
     candidate_tps=(1, 2, 4, 8),
     engine: str = "event",
+    kv_watermark: float = 0.9,
+    kv_audit: bool = False,
     **policy_kw,
 ):
     tps = [t for t in candidate_tps if t <= n_chips]
@@ -1383,6 +1697,9 @@ def run_system(
         policy = StaticPolicy(perf, tiers, tp=tp, disaggregated=disagg, candidate_tps=tps)
     else:
         policy = mk[system]()
-    sim = Simulator(perf, tiers, n_chips, policy, engine=engine)
+    sim = Simulator(
+        perf, tiers, n_chips, policy, engine=engine,
+        kv_watermark=kv_watermark, kv_audit=kv_audit,
+    )
     meter = sim.run(workload)
     return sim, meter

@@ -37,6 +37,19 @@ class EquivalenceResult:
     finished_fluid: int = 0
     wall_event_s: float = 0.0
     wall_fluid_s: float = 0.0
+    # per-tier KV-backpressure admission spills (SimResult.spills); both
+    # engines must agree qualitatively: zero stays zero, pressure engages
+    # in both or neither
+    spills_event: Dict[str, int] = field(default_factory=dict)
+    spills_fluid: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def spill_total_event(self) -> int:
+        return sum(self.spills_event.values())
+
+    @property
+    def spill_total_fluid(self) -> int:
+        return sum(self.spills_fluid.values())
 
     @property
     def speedup(self) -> float:
@@ -49,6 +62,7 @@ class EquivalenceResult:
         return (
             f"{self.system}: event={self.goodput_event:.3f} "
             f"fluid={self.goodput_fluid:.3f} rel_err={self.rel_err:+.4f} "
+            f"spills={self.spill_total_event}/{self.spill_total_fluid} "
             f"speedup={self.speedup:.1f}x"
         )
 
@@ -74,9 +88,10 @@ def compare_engines(
             meter.per_tier_goodput(workload.horizon_s),
             len(sim.finished),
             wall,
+            dict(sim.spill_counts),
         )
-    ge, pte, fe, we = out["event"]
-    gf, ptf, ff, wf = out["fluid"]
+    ge, pte, fe, we, se = out["event"]
+    gf, ptf, ff, wf, sf = out["fluid"]
     return EquivalenceResult(
         system=system,
         goodput_event=ge,
@@ -88,6 +103,8 @@ def compare_engines(
         finished_fluid=ff,
         wall_event_s=we,
         wall_fluid_s=wf,
+        spills_event=se,
+        spills_fluid=sf,
     )
 
 

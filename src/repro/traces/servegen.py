@@ -44,6 +44,28 @@ def servegen_two_tier(horizon_s: float = 600.0, seed: int = 0, rps_scale: float 
     return merge_workloads("servegen-2tier", conv, code)
 
 
+def servegen_longctx(
+    horizon_s: float = 240.0, seed: int = 0, rps_scale: float = 1.0,
+) -> Workload:
+    """ServeGen-style long-context mix: 8-32k-token prompts (agentic /
+    document workloads from the ServeGen length study), two tiers. At these
+    context lengths a TP group's HBM holds only a handful of sequences, so
+    this is the trace that exercises dynamic KV occupancy accounting and
+    admission backpressure (docs/simulator.md §KV occupancy) — the regime
+    where the paper's KV migration and TP adaptation matter most (Fig. 7)."""
+    conv = make_workload(
+        "longctx-chat", "strict", 0.72 * rps_scale,
+        prompt_mean=12288, output_mean=200, horizon_s=horizon_s, seed=seed,
+        burstiness=0.7, prompt_sigma=0.45, prompt_lo=8192, prompt_hi=32768,
+    )
+    doc = make_workload(
+        "longctx-doc", "relaxed", 1.08 * rps_scale,
+        prompt_mean=16384, output_mean=400, horizon_s=horizon_s, seed=seed + 1,
+        burstiness=0.7, prompt_sigma=0.5, prompt_lo=8192, prompt_hi=32768,
+    )
+    return merge_workloads("servegen-longctx", conv, doc)
+
+
 def servegen_shifting(
     horizon_s: float = 600.0, seed: int = 0, rps_scale: float = 1.0,
     n_phases: int = 4,

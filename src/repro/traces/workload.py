@@ -104,10 +104,15 @@ def make_workload(
     seed: int = 0,
     burstiness: float = 0.6,
     req_id_base: int = 0,
+    prompt_sigma: float = 0.9,
+    prompt_lo: int = 8,
+    prompt_hi: int = 32768,
 ) -> Workload:
     rng = np.random.RandomState(seed)
     t = bursty_arrivals(rng, mean_rps, horizon_s, burstiness)
-    pl = lognormal_lengths(rng, prompt_mean, len(t))
+    pl = lognormal_lengths(
+        rng, prompt_mean, len(t), sigma=prompt_sigma, lo=prompt_lo, hi=prompt_hi
+    )
     ol = lognormal_lengths(rng, output_mean, len(t), sigma=0.7, lo=2, hi=4096)
     reqs = [
         TraceRequest(req_id_base + i, tier, float(t[i]), int(pl[i]), int(ol[i]))

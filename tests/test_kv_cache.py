@@ -1,0 +1,83 @@
+"""PagedPool / SlotCache edge cases (serving/kv_cache.py).
+
+Regressions for the seed's paged-pool bugs: ValueError on an empty
+block-table query, O(n) free-list pops, and the untested alloc/extend/
+release paths."""
+from collections import deque
+
+import numpy as np
+import pytest
+
+from repro.serving.kv_cache import PagedPool
+
+
+@pytest.fixture
+def pool():
+    return PagedPool(num_pages=16, page_size=4, kv_heads=2, head_dim=8, n_layers=2)
+
+
+def test_free_list_is_a_deque(pool):
+    assert isinstance(pool.free_pages, deque)
+    assert len(pool.free_pages) == 16
+
+
+def test_zero_token_alloc_seq(pool):
+    assert pool.alloc_seq(0, 0) is True
+    assert pool.tables[0] == []
+    assert pool.seq_lens[0] == 0
+    assert len(pool.free_pages) == 16
+    # a zero-page sequence can still be extended and released
+    assert pool.extend_seq(0, 1) is True
+    assert len(pool.tables[0]) == 1
+    pool.release_seq(0)
+    assert len(pool.free_pages) == 16 and 0 not in pool.tables
+
+
+def test_block_table_array_empty(pool):
+    out = pool.block_table_array([])
+    assert out.shape == (0, 0) and out.dtype == np.int32
+    pool.alloc_seq(1, 0)  # zero-page sequence -> width 0
+    assert pool.block_table_array([1]).shape == (1, 0)
+
+
+def test_extend_seq_across_page_boundary(pool):
+    assert pool.alloc_seq(7, 3) is True  # 3 tokens -> 1 page of 4
+    assert len(pool.tables[7]) == 1
+    assert pool.extend_seq(7, 1) is True  # 4 tokens: still page 1
+    assert len(pool.tables[7]) == 1
+    assert pool.extend_seq(7, 1) is True  # 5 tokens: crosses into page 2
+    assert len(pool.tables[7]) == 2
+    assert pool.seq_lens[7] == 5
+    assert len(pool.free_pages) == 14
+
+
+def test_release_then_realloc_reuses_pages(pool):
+    assert pool.alloc_seq(1, 8) is True  # 2 pages
+    used = list(pool.tables[1])
+    pool.release_seq(1)
+    assert len(pool.free_pages) == 16
+    # exhaust the pool: all 16 pages allocatable again, including the
+    # released ones
+    assert pool.alloc_seq(2, 64) is True
+    assert sorted(pool.tables[2]) == list(range(16))
+    assert set(used) <= set(pool.tables[2])
+    assert pool.alloc_seq(3, 1) is False  # pool exhausted -> clean refusal
+    assert 3 not in pool.tables
+
+
+def test_alloc_failure_leaves_pool_intact(pool):
+    assert pool.alloc_seq(1, 60) is True  # 15 pages
+    free_before = list(pool.free_pages)
+    assert pool.extend_seq(1, 8) is False  # needs 2 pages, only 1 free
+    assert list(pool.free_pages) == free_before
+    assert pool.seq_lens[1] == 60
+
+
+def test_fragmentation_and_migration_ids(pool):
+    pool.alloc_seq(1, 8)
+    pool.alloc_seq(2, 8)
+    pool.release_seq(1)
+    pool.alloc_seq(3, 12)  # reuses 1's pages + one fresh -> non-contiguous
+    assert 0.0 <= pool.fragmentation() <= 1.0
+    ids = pool.migration_page_ids([2, 3])
+    assert sorted(ids.tolist()) == sorted(pool.tables[2] + pool.tables[3])

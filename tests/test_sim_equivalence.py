@@ -10,7 +10,7 @@ from repro.configs import get_config
 from repro.profiles.perf_model import PerfModel
 from repro.profiles.slo import derive_tiers
 from repro.testing.sim_equivalence import check_equivalence, compare_engines
-from repro.traces.servegen import servegen_two_tier
+from repro.traces.servegen import servegen_longctx, servegen_two_tier
 
 
 @pytest.fixture(scope="module")
@@ -52,3 +52,31 @@ def test_equivalence_across_load_levels(perf, tiers):
         wl = servegen_two_tier(horizon_s=45.0, seed=2, rps_scale=scale)
         r = compare_engines("nitsum", perf, tiers, 16, wl)
         assert r.within(0.02), (scale, r.summary())
+
+
+def test_equivalence_under_kv_backpressure(perf):
+    """Parity gates the dynamic KV-occupancy code path: on the long-context
+    trace the engines must agree on goodput within 2% WHILE admission
+    backpressure is engaging (spills > 0 in both engines)."""
+    tiers_long = derive_tiers(perf, prompt_len=14000, ctx_len=15000)
+    wl = servegen_longctx(horizon_s=90.0, seed=0)
+    results = {}
+    for system in ("sglang", "nitsum"):
+        r = results[system] = compare_engines(system, perf, tiers_long, 16, wl)
+        assert r.within(0.02), r.summary()
+        # both engines complete the same request population
+        assert abs(r.finished_event - r.finished_fluid) <= max(
+            2, 0.02 * r.finished_fluid
+        ), r.summary()
+    # backpressure engages for the static baseline, in BOTH engines
+    r_sgl = results["sglang"]
+    assert r_sgl.spill_total_event > 0 and r_sgl.spill_total_fluid > 0
+
+
+@pytest.mark.slow
+def test_equivalence_longctx_all_engines_full_horizon(perf):
+    tiers_long = derive_tiers(perf, prompt_len=14000, ctx_len=15000)
+    wl = servegen_longctx(horizon_s=240.0, seed=0)
+    for system in ("sglang", "nitsum"):
+        r = compare_engines(system, perf, tiers_long, 16, wl)
+        assert r.within(0.02), r.summary()
