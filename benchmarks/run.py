@@ -4,6 +4,12 @@
 
 Prints ``name,us_per_call,derived`` CSV rows; detailed payloads land in
 benchmarks/results/*.json (consumed by EXPERIMENTS.md).
+
+Failure contract: every registered module runs (one broken cell never
+shadows the others' results), but any failure — import error or a raise
+inside ``run()`` — is recorded, echoed as a ``FAILED`` CSV row, summarized
+with its traceback on stderr at the end, and the process exits nonzero.
+An unknown ``--only`` name is an immediate error, not a silent no-op.
 """
 from __future__ import annotations
 
@@ -24,6 +30,7 @@ MODULES = [
     "sched_throughput",
     "sim_throughput",
     "kv_backpressure",
+    "scenario_matrix",
     "roofline_table",
 ]
 
@@ -34,26 +41,39 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
     mods = args.only.split(",") if args.only else MODULES
+    unknown = [m for m in mods if m not in MODULES]
+    if unknown:
+        raise SystemExit(
+            f"unknown benchmark(s) {unknown}; registered: {MODULES}"
+        )
 
     print("name,us_per_call,derived")
-    failed = []
+    failures = []  # (name, formatted traceback)
     for name in mods:
-        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         t0 = time.time()
         try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
             rows = mod.run(quick=args.quick)
         except Exception as e:  # noqa: BLE001
-            failed.append(name)
+            # one-line echo now; the end-of-run summary owns the traceback
+            failures.append((name, traceback.format_exc()))
             print(f"{name},0,FAILED:{e!r}", flush=True)
-            traceback.print_exc(file=sys.stderr)
             continue
         wall = (time.time() - t0) * 1e6
         for r in rows:
             if r.us_per_call == 0.0:
                 r.us_per_call = wall / max(len(rows), 1)
             print(r.csv(), flush=True)
-    if failed:
-        raise SystemExit(f"benchmarks failed: {failed}")
+    if failures:
+        print(
+            f"\n=== {len(failures)}/{len(mods)} benchmark(s) FAILED ===",
+            file=sys.stderr,
+        )
+        for name, tb in failures:
+            print(f"\n--- {name} ---\n{tb}", file=sys.stderr)
+        raise SystemExit(
+            f"benchmarks failed: {[name for name, _ in failures]}"
+        )
 
 
 if __name__ == "__main__":

@@ -1176,6 +1176,9 @@ class SimResult:
     reconfig_count: int
     timeline: List[Tuple[float, float]]
     spill_timeline: List[Tuple[float, int]]
+    # (t, cumulative reconfigurations) per second — the scenario matrix
+    # plots reconfiguration activity against the workload's phase structure
+    reconfig_timeline: List[Tuple[float, int]] = field(default_factory=list)
 
     @property
     def spill_total(self) -> int:
@@ -1216,6 +1219,7 @@ class Simulator:
         self.kv_audit = kv_audit
         self.spill_counts: Dict[str, int] = {t.name: 0 for t in tiers}
         self.spill_timeline: List[Tuple[float, int]] = []
+        self.reconfig_timeline: List[Tuple[float, int]] = []
         # grid parity (event engine only): admit arrivals and stamp decode
         # finishes on the fluid engine's dt grid, so the two engines differ
         # only by the analytic-integration error, not by discretization
@@ -1261,6 +1265,7 @@ class Simulator:
             reconfig_count=self.reconfig_count,
             timeline=list(self.timeline),
             spill_timeline=list(self.spill_timeline),
+            reconfig_timeline=list(self.reconfig_timeline),
         )
 
     def group_by_id(self, gid: int) -> Group:
@@ -1521,6 +1526,7 @@ class Simulator:
                 self.spill_timeline.append(
                     (self.now, sum(self.spill_counts.values()))
                 )
+                self.reconfig_timeline.append((self.now, self.reconfig_count))
                 self._win_good = 0
                 next_second += 1.0
             if self.now >= next_window:
@@ -1649,6 +1655,7 @@ class Simulator:
                 self._recent_expire()  # static policies never query stats
                 self.timeline.append((t, self._win_good / 1.0))
                 self.spill_timeline.append((t, sum(self.spill_counts.values())))
+                self.reconfig_timeline.append((t, self.reconfig_count))
                 self._win_good = 0
                 next_second += 1.0
             if t >= next_window:

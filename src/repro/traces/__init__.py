@@ -1,6 +1,13 @@
 from repro.traces.workload import TraceRequest, Workload, merge_workloads
 from repro.traces.servegen import servegen_workload
 from repro.traces.azure import azure_workload
+from repro.traces.scenarios import (
+    EnvelopeSpec,
+    ScenarioSpec,
+    StreamSpec,
+    get_scenario,
+    list_scenarios,
+)
 
 __all__ = [
     "TraceRequest",
@@ -8,4 +15,9 @@ __all__ = [
     "merge_workloads",
     "servegen_workload",
     "azure_workload",
+    "EnvelopeSpec",
+    "ScenarioSpec",
+    "StreamSpec",
+    "get_scenario",
+    "list_scenarios",
 ]

@@ -1,0 +1,376 @@
+"""Scenario matrix: parameterized, seeded hour-scale tiered workloads.
+
+The paper's headline claim is goodput under *time-varying* workload mix,
+request lengths, and load intensity (§2.3 motivation; Fig. 9/12 sweeps).
+This module turns the ServeGen/azure trace machinery into a library of
+named, composable non-stationary scenarios:
+
+  * ``diurnal``          — hour-scale sinusoidal rate cycle, tiers in
+                           antiphase (conversation peaks while code dips);
+  * ``flash_crowd``      — steady base load punctuated by short flash
+                           crowds (synchronized user events, 4-6x rate);
+  * ``tier_drift``       — the strict:relaxed request mix ramps from
+                           strict-light to strict-heavy across the trace,
+                           so the goodput-optimal TP layout drifts;
+  * ``longctx_phases``   — short-context base with square-wave phases of
+                           8-32k-token document traffic (KV backpressure
+                           engages only inside the phases);
+  * ``prefill_heavy``    — long prompts, short outputs (retrieval /
+                           summarization ingest): prefill-bound regime;
+  * ``decode_heavy``     — short prompts, long outputs (generation /
+                           reasoning): decode-bound regime.
+
+Every scenario is a :class:`ScenarioSpec` — a frozen, declarative
+composition of per-tier :class:`StreamSpec` s with deterministic
+:class:`EnvelopeSpec` rate modulation. ``spec.build(seed)`` realizes a
+:class:`~repro.traces.workload.Workload`; the same (spec, seed) always
+yields the identical trace (tests/test_scenarios.py gates this), and the
+spec exposes its *expected* statistics (total rate, tier mix, length
+means) so realized traces can be checked against it
+(repro.testing.scenario_checks).
+
+Envelopes are normalized to mean 1.0 over the horizon, so a stream's
+realized average rate equals ``mean_rps`` no matter how the modulation
+reshapes it — scenario intensity is controlled solely by ``rps_scale``
+(benchmarks/scenario_matrix.py scales it with cluster size).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.traces.servegen import STATS as SERVEGEN_STATS
+from repro.traces.workload import Workload, make_workload, merge_workloads
+
+ENVELOPE_DT_S = 1.0  # envelope sample spacing (matches bursty_arrivals bins)
+
+
+@dataclass(frozen=True)
+class EnvelopeSpec:
+    """Deterministic rate-multiplier shape over the (unit-scaled) horizon.
+
+    All knobs are expressed in fractions of the horizon so a scenario can
+    be built at any length (hour-long for the matrix, seconds-long for
+    tests) without re-tuning. The sampled envelope is normalized to mean
+    1.0, so it redistributes a stream's arrivals in time without changing
+    the average rate.
+    """
+
+    # sinusoid: 1 + amplitude * sin(2*pi*(cycles * t/horizon) + phase)
+    diurnal_amplitude: float = 0.0
+    diurnal_cycles: float = 1.0  # full cycles across the horizon
+    diurnal_phase: float = 0.0
+    # linear mix drift: multiplier ramps (1 - drift) -> (1 + drift)
+    drift: float = 0.0
+    # flash crowds: (t0_frac, dur_frac, magnitude) — adds `magnitude` to
+    # the multiplier inside [t0, t0 + dur)
+    flash_crowds: Tuple[Tuple[float, float, float], ...] = ()
+    # active phases: stream only emits inside these [t0_frac, t1_frac)
+    # windows (empty = always on)
+    phases: Tuple[Tuple[float, float], ...] = ()
+
+    def values(self, horizon_s: float) -> np.ndarray:
+        n = max(int(horizon_s / ENVELOPE_DT_S), 1)
+        t = (np.arange(n) + 0.5) / n  # bin centers, in horizon fractions
+        env = np.ones(n)
+        if self.diurnal_amplitude:
+            env += self.diurnal_amplitude * np.sin(
+                2.0 * math.pi * (self.diurnal_cycles * t) + self.diurnal_phase
+            )
+        if self.drift:
+            env *= 1.0 + self.drift * (2.0 * t - 1.0)
+        for t0, dur, mag in self.flash_crowds:
+            env += mag * ((t >= t0) & (t < t0 + dur))
+        if self.phases:
+            mask = np.zeros(n, dtype=bool)
+            for t0, t1 in self.phases:
+                mask |= (t >= t0) & (t < t1)
+            env *= mask
+        env = np.clip(env, 0.0, None)
+        mean = env.mean()
+        return env / mean if mean > 0 else env
+
+
+@dataclass(frozen=True)
+class StreamSpec:
+    """One tier's request stream: rate, length distributions, modulation."""
+
+    tier: str
+    mean_rps: float
+    prompt_mean: float
+    output_mean: float
+    prompt_sigma: float = 0.9
+    prompt_lo: int = 8
+    prompt_hi: int = 32768
+    output_sigma: float = 0.7
+    output_lo: int = 2
+    output_hi: int = 4096
+    burstiness: float = 0.6
+    envelope: EnvelopeSpec = field(default_factory=EnvelopeSpec)
+
+
+@dataclass(frozen=True)
+class ScenarioSpec:
+    """A named, seeded, non-stationary tiered workload composition."""
+
+    name: str
+    horizon_s: float
+    streams: Tuple[StreamSpec, ...]
+    description: str = ""
+
+    # ---- expected statistics (what scenario_checks verifies against) ----
+    @property
+    def expected_rps(self) -> float:
+        return sum(s.mean_rps for s in self.streams)
+
+    @property
+    def expected_tier_mix(self) -> Dict[str, float]:
+        """Expected fraction of requests per tier."""
+        tot = self.expected_rps or 1.0
+        mix: Dict[str, float] = {}
+        for s in self.streams:
+            mix[s.tier] = mix.get(s.tier, 0.0) + s.mean_rps / tot
+        return mix
+
+    @property
+    def expected_prompt_mean(self) -> float:
+        """Rate-weighted mean prompt length (before lo/hi clipping)."""
+        tot = self.expected_rps or 1.0
+        return sum(s.mean_rps * s.prompt_mean for s in self.streams) / tot
+
+    @property
+    def expected_output_mean(self) -> float:
+        tot = self.expected_rps or 1.0
+        return sum(s.mean_rps * s.output_mean for s in self.streams) / tot
+
+    # ---- realization -----------------------------------------------------
+    def build(
+        self,
+        seed: int = 0,
+        horizon_s: Optional[float] = None,
+        rps_scale: float = 1.0,
+    ) -> Workload:
+        """Realize the scenario as a concrete trace. Deterministic in
+        (spec, seed, horizon_s, rps_scale): stream *i* draws from
+        ``RandomState(seed + i)``, envelopes are deterministic."""
+        horizon = float(horizon_s if horizon_s is not None else self.horizon_s)
+        parts = []
+        for i, s in enumerate(self.streams):
+            parts.append(
+                make_workload(
+                    f"{self.name}/{s.tier}{i}",
+                    s.tier,
+                    s.mean_rps * rps_scale,
+                    s.prompt_mean,
+                    s.output_mean,
+                    horizon_s=horizon,
+                    seed=seed + i,
+                    burstiness=s.burstiness,
+                    prompt_sigma=s.prompt_sigma,
+                    prompt_lo=s.prompt_lo,
+                    prompt_hi=s.prompt_hi,
+                    output_sigma=s.output_sigma,
+                    output_lo=s.output_lo,
+                    output_hi=s.output_hi,
+                    envelope=s.envelope.values(horizon),
+                )
+            )
+        return merge_workloads(self.name, *parts)
+
+    def scaled(self, rps_scale: float) -> "ScenarioSpec":
+        """Spec with every stream's rate scaled (expected stats follow)."""
+        return replace(
+            self,
+            streams=tuple(
+                replace(s, mean_rps=s.mean_rps * rps_scale) for s in self.streams
+            ),
+        )
+
+
+# ===========================================================================
+# Named scenarios (the matrix rows). Base rates are the ServeGen two-tier
+# operating point that saturates the 16-chip reference pool; the matrix
+# runner scales them with cluster size.
+# ===========================================================================
+_CONV = SERVEGEN_STATS["conversation"]
+_CODE = SERVEGEN_STATS["code"]
+_HOUR = 3600.0
+
+
+def _diurnal() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="diurnal",
+        horizon_s=_HOUR,
+        description=(
+            "Hour-scale sinusoidal load cycle; strict conversation and "
+            "relaxed code traffic peak in antiphase, so both total load "
+            "and the tier mix vary continuously."
+        ),
+        streams=(
+            StreamSpec(
+                "strict", _CONV["mean_rps"], _CONV["prompt_mean"],
+                _CONV["output_mean"], burstiness=0.7,
+                envelope=EnvelopeSpec(diurnal_amplitude=0.6, diurnal_cycles=1.0),
+            ),
+            StreamSpec(
+                "relaxed", _CODE["mean_rps"], _CODE["prompt_mean"],
+                _CODE["output_mean"], burstiness=0.7,
+                envelope=EnvelopeSpec(
+                    diurnal_amplitude=0.6, diurnal_cycles=1.0,
+                    diurnal_phase=math.pi,
+                ),
+            ),
+        ),
+    )
+
+
+def _flash_crowd() -> ScenarioSpec:
+    # three crowds of growing magnitude; each lasts ~2% of the horizon
+    crowds = ((0.25, 0.02, 3.0), (0.55, 0.02, 4.0), (0.8, 0.02, 5.0))
+    return ScenarioSpec(
+        name="flash_crowd",
+        horizon_s=_HOUR,
+        description=(
+            "Steady two-tier base load punctuated by synchronized flash "
+            "crowds (4-6x rate for ~70s) hitting the strict tier."
+        ),
+        streams=(
+            StreamSpec(
+                "strict", _CONV["mean_rps"], _CONV["prompt_mean"],
+                _CONV["output_mean"], burstiness=0.5,
+                envelope=EnvelopeSpec(flash_crowds=crowds),
+            ),
+            StreamSpec(
+                "relaxed", _CODE["mean_rps"], _CODE["prompt_mean"],
+                _CODE["output_mean"], burstiness=0.5,
+            ),
+        ),
+    )
+
+
+def _tier_drift() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="tier_drift",
+        horizon_s=_HOUR,
+        description=(
+            "The strict:relaxed mix ramps from 30:70-ish to 70:30-ish "
+            "across the trace (linear antiphase drift), so the "
+            "goodput-optimal configuration shifts mid-replay — the "
+            "paper's §2.3 time-varying-mix motivation at hour scale."
+        ),
+        streams=(
+            StreamSpec(
+                "strict", _CONV["mean_rps"], _CONV["prompt_mean"],
+                _CONV["output_mean"], burstiness=0.7,
+                envelope=EnvelopeSpec(drift=0.7),
+            ),
+            StreamSpec(
+                "relaxed", _CODE["mean_rps"], _CODE["prompt_mean"],
+                _CODE["output_mean"], burstiness=0.7,
+                envelope=EnvelopeSpec(drift=-0.7),
+            ),
+        ),
+    )
+
+
+def _longctx_phases() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="longctx_phases",
+        horizon_s=_HOUR,
+        description=(
+            "Short-context two-tier base with two long-context phases "
+            "(8-32k document prompts at ~15% of base rate) occupying the "
+            "middle fifths of the trace — KV occupancy and admission "
+            "backpressure engage only inside the phases."
+        ),
+        streams=(
+            StreamSpec(
+                "strict", _CONV["mean_rps"], _CONV["prompt_mean"],
+                _CONV["output_mean"], burstiness=0.6,
+            ),
+            StreamSpec(
+                "relaxed", _CODE["mean_rps"] * 0.85, _CODE["prompt_mean"],
+                _CODE["output_mean"], burstiness=0.6,
+            ),
+            StreamSpec(
+                "relaxed", _CODE["mean_rps"] * 0.15, 16384, 400,
+                prompt_sigma=0.5, prompt_lo=8192, prompt_hi=32768,
+                burstiness=0.6,
+                envelope=EnvelopeSpec(phases=((0.2, 0.4), (0.6, 0.8))),
+            ),
+        ),
+    )
+
+
+def _prefill_heavy() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="prefill_heavy",
+        horizon_s=_HOUR,
+        description=(
+            "Retrieval/summarization ingest: 4-6k-token prompts, <=64-token "
+            "outputs. Prefill-bound — stresses TTFT routing and "
+            "prefill/decode interference. Rates are 0.25x the two-tier "
+            "base: per-request prefill work is ~5.7x, so this is the "
+            "16-chip saturation point for THIS regime (calibrated: "
+            "goodput/injected ~0.95 at 0.2x, ~0.77 at 0.3x)."
+        ),
+        streams=(
+            StreamSpec(
+                "strict", _CONV["mean_rps"] * 0.25, 4096, 48,
+                prompt_sigma=0.5, output_sigma=0.5, output_hi=256,
+                burstiness=0.6,
+            ),
+            StreamSpec(
+                "relaxed", _CODE["mean_rps"] * 0.25, 6144, 64,
+                prompt_sigma=0.5, output_sigma=0.5, output_hi=256,
+                burstiness=0.6,
+            ),
+        ),
+    )
+
+
+def _decode_heavy() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="decode_heavy",
+        horizon_s=_HOUR,
+        description=(
+            "Generation/reasoning traffic: short (~200-token) prompts, "
+            "600-900-token outputs. Decode-bound — stresses TPOT batch "
+            "caps and KV growth during generation."
+        ),
+        streams=(
+            StreamSpec(
+                "strict", _CONV["mean_rps"] * 0.6, 200, 600,
+                prompt_sigma=0.6, output_sigma=0.5, burstiness=0.6,
+            ),
+            StreamSpec(
+                "relaxed", _CODE["mean_rps"] * 0.6, 256, 900,
+                prompt_sigma=0.6, output_sigma=0.5, burstiness=0.6,
+            ),
+        ),
+    )
+
+
+_REGISTRY = {
+    s.name: s
+    for s in (
+        _diurnal(), _flash_crowd(), _tier_drift(), _longctx_phases(),
+        _prefill_heavy(), _decode_heavy(),
+    )
+}
+
+
+def list_scenarios() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def get_scenario(name: str) -> ScenarioSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; known: {sorted(_REGISTRY)}"
+        ) from None

@@ -66,6 +66,26 @@ def servegen_longctx(
     return merge_workloads("servegen-longctx", conv, doc)
 
 
+def servegen_hourlong(
+    scenario: str = "diurnal",
+    horizon_s: float = 3600.0,
+    seed: int = 0,
+    rps_scale: float = 1.0,
+):
+    """Hour-long ServeGen-calibrated trace with non-stationary structure.
+
+    Thin entry point over the scenario library (traces/scenarios.py): the
+    named scenarios compose these ServeGen rate/length statistics with
+    deterministic envelopes (diurnal cycles, flash crowds, tier-mix
+    drift, long-context phases). Imported lazily — scenarios builds on
+    this module's STATS, not the other way round."""
+    from repro.traces.scenarios import get_scenario
+
+    return get_scenario(scenario).build(
+        seed=seed, horizon_s=horizon_s, rps_scale=rps_scale
+    )
+
+
 def servegen_shifting(
     horizon_s: float = 600.0, seed: int = 0, rps_scale: float = 1.0,
     n_phases: int = 4,

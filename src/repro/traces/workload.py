@@ -61,8 +61,17 @@ def bursty_arrivals(
     burstiness: float = 0.6,
     micro_burst_rate: float = 0.02,
     micro_burst_size: int = 8,
+    envelope: Optional[np.ndarray] = None,
 ) -> np.ndarray:
-    """Cox-process arrival times with minute-scale modulation + micro-bursts."""
+    """Cox-process arrival times with minute-scale modulation + micro-bursts.
+
+    ``envelope`` is an optional deterministic rate-multiplier series (one
+    value per 1-second bin; resampled if its length differs) composed on
+    top of the stochastic log-AR(1) modulation — this is how scenario
+    generators impose diurnal cycles, flash crowds, and tier-mix drift
+    (traces/scenarios.py). The product is renormalized so the *realized*
+    mean rate stays ``mean_rps`` regardless of the envelope's shape.
+    """
     dt = 1.0
     n_bins = int(horizon_s / dt)
     # slow modulation: log-AR(1)
@@ -72,12 +81,33 @@ def bursty_arrivals(
     for i in range(1, n_bins):
         log_rate[i] = rho * log_rate[i - 1] + rng.normal(0, sigma)
     rate = np.exp(log_rate)
-    rate *= mean_rps / rate.mean()  # normalize realized mean to the target
+    env_n = None
+    if envelope is not None:
+        env = np.asarray(envelope, dtype=float)
+        if len(env) != n_bins:
+            env = np.interp(
+                np.linspace(0.0, 1.0, n_bins),
+                np.linspace(0.0, 1.0, max(len(env), 2)),
+                env if len(env) >= 2 else np.repeat(env, 2),
+            )
+        env = np.clip(env, 0.0, None)
+        if env.mean() <= 0:
+            return np.zeros(0)
+        env_n = env / env.mean()  # mean-1 multiplier (also gates bursts)
+        rate *= env_n
+    mean = rate.mean()
+    if mean <= 0:
+        return np.zeros(0)
+    rate *= mean_rps / mean  # normalize realized mean to the target
     arrivals: List[float] = []
     for i in range(n_bins):
         n = rng.poisson(rate[i] * dt)
         arrivals.extend(i * dt + rng.uniform(0, dt, size=n))
-        if rng.uniform() < micro_burst_rate * dt:  # synchronized burst
+        # synchronized burst; micro-bursts follow the envelope (a silent
+        # phase window must not emit bursts), drawn unconditionally so the
+        # rng stream — hence every envelope-free seed trace — is unchanged
+        p_burst = micro_burst_rate * dt * (env_n[i] if env_n is not None else 1.0)
+        if rng.uniform() < p_burst:
             t0 = i * dt + rng.uniform(0, dt)
             k = rng.poisson(micro_burst_size)
             arrivals.extend(t0 + rng.exponential(0.3, size=k))
@@ -107,13 +137,19 @@ def make_workload(
     prompt_sigma: float = 0.9,
     prompt_lo: int = 8,
     prompt_hi: int = 32768,
+    output_sigma: float = 0.7,
+    output_lo: int = 2,
+    output_hi: int = 4096,
+    envelope: Optional[np.ndarray] = None,
 ) -> Workload:
     rng = np.random.RandomState(seed)
-    t = bursty_arrivals(rng, mean_rps, horizon_s, burstiness)
+    t = bursty_arrivals(rng, mean_rps, horizon_s, burstiness, envelope=envelope)
     pl = lognormal_lengths(
         rng, prompt_mean, len(t), sigma=prompt_sigma, lo=prompt_lo, hi=prompt_hi
     )
-    ol = lognormal_lengths(rng, output_mean, len(t), sigma=0.7, lo=2, hi=4096)
+    ol = lognormal_lengths(
+        rng, output_mean, len(t), sigma=output_sigma, lo=output_lo, hi=output_hi
+    )
     reqs = [
         TraceRequest(req_id_base + i, tier, float(t[i]), int(pl[i]), int(ol[i]))
         for i in range(len(t))

@@ -10,6 +10,7 @@ from repro.configs import get_config
 from repro.profiles.perf_model import PerfModel
 from repro.profiles.slo import derive_tiers
 from repro.testing.sim_equivalence import check_equivalence, compare_engines
+from repro.traces.scenarios import get_scenario, list_scenarios
 from repro.traces.servegen import servegen_longctx, servegen_two_tier
 
 
@@ -80,3 +81,29 @@ def test_equivalence_longctx_all_engines_full_horizon(perf):
     for system in ("sglang", "nitsum"):
         r = compare_engines(system, perf, tiers_long, 16, wl)
         assert r.within(0.02), r.summary()
+
+
+def test_equivalence_on_nonstationary_scenario(perf, tiers):
+    """Scenario-matrix traces are non-stationary (envelopes, flash crowds),
+    a regime the original parity suite never exercised: the engines must
+    stay within the 2% budget on them too — part of the 'two consecutive
+    green PRs' condition for dropping the fluid engine (ROADMAP)."""
+    wl = get_scenario("flash_crowd").build(seed=0, horizon_s=60.0)
+    results = check_equivalence(perf, tiers, 16, wl,
+                                systems=("nitsum", "sglang"), rtol=0.02)
+    for r in results:
+        assert r.finished_event > 0 and r.finished_fluid > 0
+        assert abs(r.finished_event - r.finished_fluid) <= max(
+            2, 0.02 * r.finished_fluid
+        ), r.summary()
+
+
+@pytest.mark.slow
+def test_equivalence_across_all_scenarios(perf, tiers):
+    """Every registered scenario holds parity at a minutes-scale horizon
+    (the matrix replays them at hour scale under the event engine only,
+    so this is where their fluid ground truth is pinned)."""
+    for name in list_scenarios():
+        wl = get_scenario(name).build(seed=1, horizon_s=90.0)
+        r = compare_engines("nitsum", perf, tiers, 16, wl)
+        assert r.within(0.02), (name, r.summary())
