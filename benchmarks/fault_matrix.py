@@ -1,0 +1,327 @@
+"""Incident matrix: {fault family} x {cluster size} x {policy} sweeps.
+
+The robustness evidence layer (docs/faults.md): every registered fault
+scenario (traces/scenarios.py FAULT_SCENARIOS — one per fault family plus
+the composed ``incident_replay``) replayed on 64-256-chip pools, nitsum's
+adaptive TP vs the static-TP baseline per cell, with ``kv_audit=True`` on
+EVERY cell so the whole matrix doubles as an exact KV-conservation proof
+under forced frees, restarts and recovery reloads.
+
+Each cell records the scenario-matrix BENCH schema plus the fault layer:
+the fault/recovery timeline, per-tier restart counts, and the per-incident
+metrics from core/incidents.py (time-to-recover, goodput dip depth/width,
+per-tier SLO damage). Per-cluster payloads land in
+``benchmarks/results/fault_matrix_{n}chips.json`` and carry a
+``family_wins`` summary — on how many of the four fault families nitsum
+beats static-TP on BOTH time-to-recover and post-fault goodput (the
+acceptance bar is >= 3 of 4).
+
+Load scales with the pool (``rps_scale = n_chips / 16``) exactly like the
+scenario matrix; fault magnitudes do NOT scale — a host is 8 chips on any
+pool, so bigger clusters see relatively milder damage, which is the
+realistic regime the paper's elasticity argument targets.
+
+Quick mode (CI fast lane) runs the 2-cell fault smoke (one host-loss
+scenario, both systems, 16 chips) into ``fault_matrix_quick.json``; the
+slow lane runs the 64/128-chip rows via env overrides
+(FAULT_MATRIX_CLUSTERS / FAULT_MATRIX_HORIZON / FAULT_MATRIX_SCENARIOS,
+mirroring the SCENARIO_MATRIX_* contract).
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from benchmarks.common import CANDIDATE_TPS, MODEL, Row, save_json
+from benchmarks.scenario_matrix import (
+    REFERENCE_CHIPS,
+    _downsample,
+    scenario_tiers,
+)
+from repro.configs import get_config
+from repro.profiles.perf_model import PerfModel, clear_perf_caches
+from repro.serving.simulator import run_system
+from repro.testing.scenario_checks import scenario_violations
+from repro.traces.scenarios import FAULT_SCENARIOS, get_scenario
+
+SYSTEMS = ("nitsum", "sglang")  # adaptive TP vs static-TP baseline
+# the four elemental families the >=3-of-4 acceptance bar is scored on
+# (incident_replay composes them and is reported but not scored)
+FAMILIES = ("fault_chip_loss", "fault_host_loss", "fault_kv_loss",
+            "fault_straggler")
+
+# cluster size -> (horizon_s, fault scenario names). Fault fractions put
+# the first fault at 35% of the horizon, so every row leaves a >= 200 s
+# post-fault window for recovery measurement.
+FULL_MATRIX: Dict[int, Tuple[float, Tuple[str, ...]]] = {
+    64: (600.0, FAULT_SCENARIOS),
+    128: (600.0, FAULT_SCENARIOS),
+    256: (600.0, ("fault_chip_loss", "fault_host_loss", "incident_replay")),
+}
+QUICK_MATRIX: Dict[int, Tuple[float, Tuple[str, ...]]] = {
+    16: (120.0, ("fault_host_loss",)),  # the 2-cell CI smoke
+}
+
+
+def build_cell_trace(
+    scenario_name: str,
+    n_chips: int,
+    horizon_s: float,
+    seed: int = 0,
+    validate_trace: bool = True,
+):
+    """One deterministic faulted trace per (scenario, cluster), shared by
+    every system replaying the cell. Arrival statistics are validated like
+    the scenario matrix's; the fault schedule is part of the workload."""
+    spec = get_scenario(scenario_name)
+    rps_scale = n_chips / REFERENCE_CHIPS
+    wl = spec.build(seed=seed, horizon_s=horizon_s, rps_scale=rps_scale)
+    assert wl.faults, f"{scenario_name} realized no faults"
+    if validate_trace:
+        bad = scenario_violations(spec, wl, rps_scale=rps_scale)
+        if bad:
+            raise AssertionError(
+                f"fault scenario {scenario_name!r} trace failed its "
+                f"statistical spec: {bad}"
+            )
+    return wl
+
+
+def _post_fault_goodput(res, first_fault_t: float) -> float:
+    """Mean goodput over the post-fault portion of the per-second timeline
+    — the steady damage a policy carries after the incident begins."""
+    post = [v for t, v in res.timeline if t >= first_fault_t]
+    return sum(post) / len(post) if post else 0.0
+
+
+def run_cell(
+    system: str,
+    scenario_name: str,
+    n_chips: int,
+    horizon_s: float,
+    perf: PerfModel,
+    tiers=None,
+    seed: int = 0,
+    validate_trace: bool = True,
+    workload=None,
+) -> Dict:
+    """Replay one (policy, fault scenario, cluster) cell with the KV audit
+    armed; returns the BENCH dict (scenario-matrix schema + fault layer)."""
+    if tiers is None:
+        tiers = scenario_tiers(perf, scenario_name)
+    wl = workload
+    if wl is None:
+        wl = build_cell_trace(
+            scenario_name, n_chips, horizon_s, seed, validate_trace
+        )
+    clear_perf_caches()
+    t0 = time.perf_counter()
+    sim, _ = run_system(
+        system, perf, tiers, n_chips, wl,
+        candidate_tps=CANDIDATE_TPS, kv_audit=True,
+    )
+    wall = time.perf_counter() - t0
+    sim._kv_audit_check()  # final-state conservation, on every cell
+    res = sim.result(wl.horizon_s)
+    first_fault_t = wl.faults[0].t_s
+    incidents = [i for i in res.incidents if "time_to_recover_s" in i]
+    return {
+        "system": system,
+        "scenario": scenario_name,
+        "n_chips": n_chips,
+        "horizon_s": horizon_s,
+        "kv_audit": True,
+        "slo": {
+            t.name: {"ttft_ms": t.ttft_ms, "tpot_ms": t.tpot_ms}
+            for t in tiers
+        },
+        "requests": len(wl.requests),
+        "injected_rps": len(wl.requests) / wl.horizon_s,
+        "faults": [
+            {"t_s": f.t_s, "kind": f.kind, "chips": f.chips,
+             "duration_s": f.duration_s, "slowdown": f.slowdown}
+            for f in wl.faults
+        ],
+        "goodput": res.goodput,
+        "post_fault_goodput": _post_fault_goodput(res, first_fault_t),
+        "per_tier_goodput": res.per_tier_goodput,
+        "spills": res.spills,
+        "spill_total": res.spill_total,
+        "reconfig_count": res.reconfig_count,
+        "finished": res.finished,
+        "fault_restarts": res.fault_restarts,
+        "fault_restart_total": res.fault_restart_total,
+        "fault_timeline": res.fault_timeline,
+        "incidents": res.incidents,
+        "time_to_recover_s": sum(
+            i["time_to_recover_s"] for i in incidents
+        ),
+        "recovery_censored": any(
+            i.get("censored", False) for i in incidents
+        ),
+        "slo_damage": {
+            tier: sum(i.get("slo_damage", {}).get(tier, 0.0)
+                      for i in incidents)
+            for tier in res.per_tier_goodput
+        },
+        "wall_s": wall,
+        "trajectory": {
+            "goodput_per_s": _downsample(res.timeline, cumulative=False),
+            "cumulative_spills": _downsample(
+                res.spill_timeline, cumulative=True
+            ),
+            "cumulative_reconfigs": _downsample(
+                res.reconfig_timeline, cumulative=True
+            ),
+        },
+    }
+
+
+# recovery times come from a goodput series smoothed over a 5 s kernel
+# (core/incidents.py smooth_s) sampled at 1 Hz: ttr differences below the
+# kernel width are not resolvable and must not decide a family
+TTR_RESOLUTION_S = 5.0
+
+
+def score_family_wins(cells: Dict[str, Dict]) -> Dict[str, Dict]:
+    """Per elemental family: does nitsum beat static-TP on BOTH
+    time-to-recover (no slower beyond metric resolution; censoring counts
+    as the window) and post-fault goodput (strictly better)? Returns
+    {family: {won, ttr, goodput}} for the payload."""
+    out = {}
+    for fam in FAMILIES:
+        n = cells.get(f"{fam}/nitsum")
+        s = cells.get(f"{fam}/sglang")
+        if not n or not s:
+            continue
+        won = (
+            n["time_to_recover_s"]
+            <= s["time_to_recover_s"] + TTR_RESOLUTION_S
+            and n["post_fault_goodput"] > s["post_fault_goodput"]
+        )
+        out[fam] = {
+            "won": won,
+            "time_to_recover_s": {
+                "nitsum": n["time_to_recover_s"],
+                "sglang": s["time_to_recover_s"],
+            },
+            "post_fault_goodput": {
+                "nitsum": n["post_fault_goodput"],
+                "sglang": s["post_fault_goodput"],
+            },
+        }
+    return out
+
+
+def run_matrix(
+    matrix: Dict[int, Tuple[float, Tuple[str, ...]]],
+    seed: int = 0,
+    systems: Sequence[str] = SYSTEMS,
+    perf: Optional[PerfModel] = None,
+    progress=None,
+) -> Dict[int, Dict]:
+    perf = perf or PerfModel(get_config(MODEL))
+    tiers_by_scenario: Dict[str, list] = {}
+    payloads: Dict[int, Dict] = {}
+    for n_chips, (horizon_s, scenarios) in sorted(matrix.items()):
+        cells = {}
+        for scen in scenarios:
+            if scen not in tiers_by_scenario:
+                tiers_by_scenario[scen] = scenario_tiers(perf, scen)
+            wl = build_cell_trace(scen, n_chips, horizon_s, seed)
+            for system in systems:
+                cell = run_cell(
+                    system, scen, n_chips, horizon_s, perf,
+                    tiers_by_scenario[scen], seed=seed, workload=wl,
+                )
+                cells[f"{scen}/{system}"] = cell
+                if progress is not None:
+                    progress(cell)
+        family_wins = score_family_wins(cells)
+        payloads[n_chips] = {
+            "n_chips": n_chips,
+            "horizon_s": horizon_s,
+            "model": MODEL,
+            "seed": seed,
+            "kv_audit": True,
+            "rps_scale": n_chips / REFERENCE_CHIPS,
+            "scenarios": list(scenarios),
+            "systems": list(systems),
+            "family_wins": family_wins,
+            "families_won": sum(f["won"] for f in family_wins.values()),
+            "cells": cells,
+        }
+    return payloads
+
+
+def _env_matrix() -> Optional[Dict[int, Tuple[float, Tuple[str, ...]]]]:
+    """CI override: FAULT_MATRIX_CLUSTERS=64,128 selects rows of the full
+    matrix; FAULT_MATRIX_HORIZON / FAULT_MATRIX_SCENARIOS override the
+    per-row horizon and fault-scenario set (SCENARIO_MATRIX_* contract)."""
+    clusters = os.environ.get("FAULT_MATRIX_CLUSTERS")
+    if not clusters:
+        return None
+    horizon = os.environ.get("FAULT_MATRIX_HORIZON")
+    scen = os.environ.get("FAULT_MATRIX_SCENARIOS")
+    out = {}
+    for c in clusters.split(","):
+        n = int(c)
+        if n not in FULL_MATRIX:
+            # ValueError, not SystemExit: benchmarks/run.py catches
+            # Exception, records the FAILED row, and keeps going
+            raise ValueError(
+                f"FAULT_MATRIX_CLUSTERS={n} is not a registered matrix "
+                f"row; known cluster sizes: {sorted(FULL_MATRIX)}"
+            )
+        h, names = FULL_MATRIX[n]
+        if horizon:
+            h = float(horizon)
+        if scen:
+            names = tuple(scen.split(","))
+        out[n] = (h, names)
+    return out
+
+
+def run(quick: bool = False) -> List[Row]:
+    env = _env_matrix()
+    matrix = env if env is not None else (QUICK_MATRIX if quick else FULL_MATRIX)
+
+    def progress(cell):
+        print(
+            f"# fault_matrix {cell['n_chips']}chips "
+            f"{cell['scenario']}/{cell['system']}: "
+            f"goodput={cell['goodput']:.1f} "
+            f"post_fault={cell['post_fault_goodput']:.1f} "
+            f"ttr={cell['time_to_recover_s']:.0f}s "
+            f"restarts={cell['fault_restart_total']} "
+            f"wall={cell['wall_s']:.0f}s",
+            flush=True,
+        )
+
+    payloads = run_matrix(matrix, progress=progress)
+    rows: List[Row] = []
+    if quick:
+        # quick runs never touch the committed per-cluster evidence files
+        save_json("fault_matrix_quick", payloads)
+    for n_chips, payload in payloads.items():
+        if not quick:
+            suffix = "_env" if env is not None else ""
+            save_json(f"fault_matrix_{n_chips}chips{suffix}", payload)
+        for key, cell in payload["cells"].items():
+            rows.append(Row(
+                f"sim.fault_matrix.{n_chips}chips.{key.replace('/', '.')}",
+                cell["wall_s"] * 1e6,
+                f"goodput={cell['goodput']:.2f} "
+                f"post_fault={cell['post_fault_goodput']:.2f} "
+                f"ttr={cell['time_to_recover_s']:.0f}s "
+                f"restarts={cell['fault_restart_total']}",
+            ))
+        if payload["family_wins"]:
+            rows.append(Row(
+                f"sim.fault_matrix.{n_chips}chips.families_won",
+                0.0,
+                f"{payload['families_won']}/{len(payload['family_wins'])} "
+                "families (ttr + post-fault goodput)",
+            ))
+    return rows

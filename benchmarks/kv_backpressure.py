@@ -7,8 +7,9 @@ must engage admission backpressure (docs/simulator.md §KV occupancy).
 
 Records per policy:
   * per-tier spill counts (SimResult.spills) — the acceptance bar is
-    spill > 0 for the static baseline on the long-context trace, and the
-    event engine agreeing with the fluid reference on goodput within 2%;
+    spill > 0 for the static baseline on the long-context trace (goodput
+    regressions are gated by the golden-trajectory harness,
+    repro.testing.sim_equivalence);
   * the BENCH trajectory: goodput timeline + cumulative-spill timeline;
   * a short-context control leg (seeded two-tier replay) that must show
     spill == 0 — backpressure never fires in the regime PR-1 calibrated.
@@ -48,38 +49,30 @@ def run(quick: bool = False):
     }
     rows = []
     for system in SYSTEMS:
-        entry = {}
-        for engine in ("fluid", "event"):
-            clear_perf_caches()
-            t0 = time.perf_counter()
-            sim, meter = run_system(system, perf, tiers, N_CHIPS, wl,
-                                    candidate_tps=CANDIDATE_TPS,
-                                    engine=engine)
-            wall = time.perf_counter() - t0
-            res = sim.result(wl.horizon_s)
-            entry[engine] = {
-                "wall_s": wall,
-                "goodput": res.goodput,
-                "per_tier_goodput": res.per_tier_goodput,
-                "spills": res.spills,
-                "spill_total": res.spill_total,
-                "finished": res.finished,
-            }
-            if engine == "event":
-                # the BENCH trajectory: goodput + cumulative spills / second
-                entry["trajectory"] = {
-                    "goodput_per_s": res.timeline,
-                    "cumulative_spills": res.spill_timeline,
-                }
-        ge = entry["event"]["goodput"]
-        gf = entry["fluid"]["goodput"]
-        entry["goodput_rel_err"] = (ge - gf) / max(gf, 1e-9)
+        clear_perf_caches()
+        t0 = time.perf_counter()
+        sim, meter = run_system(system, perf, tiers, N_CHIPS, wl,
+                                candidate_tps=CANDIDATE_TPS)
+        wall = time.perf_counter() - t0
+        res = sim.result(wl.horizon_s)
+        entry = {
+            "wall_s": wall,
+            "goodput": res.goodput,
+            "per_tier_goodput": res.per_tier_goodput,
+            "spills": res.spills,
+            "spill_total": res.spill_total,
+            "finished": res.finished,
+            # the BENCH trajectory: goodput + cumulative spills / second
+            "trajectory": {
+                "goodput_per_s": res.timeline,
+                "cumulative_spills": res.spill_timeline,
+            },
+        }
         payload["systems"][system] = entry
         rows.append(Row(
             f"sim.kv_backpressure_{system}.spills",
-            entry["event"]["wall_s"] * 1e6,
-            f"spills={entry['event']['spill_total']} "
-            f"goodput={ge:.2f} (err {entry['goodput_rel_err']:+.3%})",
+            wall * 1e6,
+            f"spills={res.spill_total} goodput={res.goodput:.2f}",
         ))
 
     # short-context control: the seeded two-tier replay must not spill

@@ -31,6 +31,7 @@ MODULES = [
     "sim_throughput",
     "kv_backpressure",
     "scenario_matrix",
+    "fault_matrix",
     "roofline_table",
 ]
 

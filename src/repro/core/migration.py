@@ -42,16 +42,32 @@ def cache_shardings(cache_defs, rules: ShardingRules, mesh: Mesh):
     )
 
 
+class MigrationAborted(RuntimeError):
+    """The source cache is guaranteed untouched: migration is functional
+    (device_put builds new arrays; nothing frees or mutates the source
+    until the caller drops its reference), so after an abort the caller
+    can retry on a reduced pool or restart the sequences from scratch."""
+
+
 def migrate_cache(cache, target_shardings):
     """Stop-and-migrate: reshard every cache leaf to the new TP layout.
 
     Under jit/device_put this lowers to ICI collectives on TPU. Returns the
     migrated cache and the host-measured wall time (meaningful on the real
     mini-cluster; the simulator uses `migration_time_model`).
+
+    Abort-safe: a mid-flight failure (source or target device dying, OOM
+    on the target layout) raises ``MigrationAborted`` with the original
+    cache intact — partially-materialized target arrays are dropped.
     """
     t0 = time.perf_counter()
-    out = jax.tree_util.tree_map(jax.device_put, cache, target_shardings)
-    jax.block_until_ready(out)
+    try:
+        out = jax.tree_util.tree_map(jax.device_put, cache, target_shardings)
+        jax.block_until_ready(out)
+    except MigrationAborted:
+        raise
+    except Exception as e:
+        raise MigrationAborted(f"cache migration aborted: {e}") from e
     return out, (time.perf_counter() - t0)
 
 

@@ -18,9 +18,17 @@ import jax
 from repro.core.weight_store import WeightStore, make_exec_mesh
 
 
+class SwitchAborted(RuntimeError):
+    """A TP switch failed mid-flight (e.g. a device died during cache
+    migration). The controller guarantees it has rolled back to the
+    pre-switch executable set and weight binding before raising, so the
+    caller may keep serving at the old TP or retry on a reduced pool."""
+
+
 @dataclass
 class SwitchStats:
     n_switches: int = 0
+    n_aborts: int = 0
     total_rebind_s: float = 0.0
     total_migrate_s: float = 0.0
     last_rebind_s: float = 0.0
@@ -71,15 +79,32 @@ class TPSwitchController:
         self.current_tp = tp
 
     def switch(self, to_tp: int, migrate_fn: Optional[Callable] = None):
-        """migrate_fn: caches -> (migrated_caches, seconds)."""
+        """migrate_fn: caches -> (migrated_caches, seconds).
+
+        Transactional: if migrate_fn raises (device loss mid-migration),
+        the pre-switch storage binding and current_tp are restored and
+        ``SwitchAborted`` is raised — the controller is never left pointing
+        at the new TP with un-migrated caches. Rollback is free because
+        rebind is zero-copy: the old storage arrays still alias the same
+        per-device buffers.
+        """
         assert self.storage is not None
+        prev_storage, prev_tp = self.storage, self.current_tp
         t0 = time.perf_counter()
         self.storage = self.store.rebind(self.storage, self.meshes[to_tp])
         rebind_s = time.perf_counter() - t0
         migrate_s = 0.0
         migrated = None
         if migrate_fn is not None:
-            migrated, migrate_s = migrate_fn(self.meshes[to_tp])
+            try:
+                migrated, migrate_s = migrate_fn(self.meshes[to_tp])
+            except Exception as e:
+                self.storage, self.current_tp = prev_storage, prev_tp
+                self.stats.n_aborts += 1
+                raise SwitchAborted(
+                    f"switch {prev_tp}->{to_tp} aborted during cache "
+                    f"migration: {e}"
+                ) from e
         self.current_tp = to_tp
         st = self.stats
         st.n_switches += 1

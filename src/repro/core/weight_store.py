@@ -141,6 +141,27 @@ class WeightStore:
             out.append(t)
         return jax.tree_util.tree_unflatten(self.treedef, out)
 
+    # ---- pool shrink after device / host loss ---------------------------
+    def shrink(self, surviving_devices: Sequence) -> "WeightStore":
+        """New store over the surviving pool after a device or host loss.
+
+        Weight shards on the dead devices are gone, so this does NOT try to
+        salvage storage arrays — the caller reloads canonical params into
+        the new layout via ``build`` (the weight-reload storm the simulator
+        prices on recovery, docs/faults.md). ``storage_tp`` is clamped to
+        the largest value that still divides the surviving pool size, so
+        the per-device-bytes invariant keeps holding on the smaller pool.
+        """
+        alive = set(surviving_devices)
+        devs = [d for d in self.devices if d in alive]  # keep pool order
+        assert devs, "shrink: no surviving devices"
+        s = min(self.s, len(devs))
+        while len(devs) % s:
+            s -= 1
+        return WeightStore(
+            self.cfg, self.canonical_defs, self.rules, devs, storage_tp=s
+        )
+
     # ---- zero-copy rebinding across TP meshes ---------------------------
     def rebind(self, storage, new_mesh: Mesh):
         """Re-associate storage arrays with a new TP mesh WITHOUT moving data.

@@ -85,9 +85,7 @@ _CACHING_ENABLED = True
 class perf_caches_disabled:
     """Context manager: bypass memoization AND input quantization so every
     query runs the raw roofline math on exact inputs. For experiments that
-    need quantization-free numbers from the live model (the speedup
-    benchmark instead uses the vendored seed snapshot in
-    benchmarks/baselines/ as its baseline)."""
+    need quantization-free numbers from the live model."""
 
     def __enter__(self):
         global _CACHING_ENABLED

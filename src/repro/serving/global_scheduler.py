@@ -30,6 +30,10 @@ class GroupHandle:
     # fraction of the group's KV budget (HBM after weights, below the
     # simulator's occupancy watermark) still free; 0 = under KV pressure
     kv_free_frac: float = 1.0
+    # False once the group is torn down (fault, migration, reconfiguration):
+    # the handle stays in the table so in-flight completions still resolve,
+    # but dispatch never routes new work to it
+    alive: bool = True
 
     @property
     def available_rps(self) -> float:
@@ -49,10 +53,18 @@ class GlobalScheduler:
             if gid in old:
                 g.committed_rps = old[gid].committed_rps
 
+    def mark_dead(self, gid: int) -> None:
+        """Flag a torn-down group so dispatch stops routing to its handle.
+        The handle is kept (not popped): completions for requests that were
+        dispatched before the teardown still release their bandwidth."""
+        g = self.groups.get(gid)
+        if g is not None:
+            g.alive = False
+
     def _prefill_groups(self, tier: Optional[str] = None) -> List[GroupHandle]:
         out = [
             g for g in self.groups.values()
-            if g.stage in ("prefill", "mixed")
+            if g.alive and g.stage in ("prefill", "mixed")
             and (tier is None or g.tier in (tier, None))
         ]
         return out
@@ -82,6 +94,8 @@ class GlobalScheduler:
         # infeasible: spill round-robin over ALL prefill groups (§3.3.2)
         cands = self._prefill_groups()
         if not cands:
+            cands = [g for g in self.groups.values() if g.alive]
+        if not cands:
             cands = list(self.groups.values())
         g = cands[next(self._rr) % len(cands)]
         return g, False
@@ -94,10 +108,13 @@ class GlobalScheduler:
     def decode_target(self, tier: str) -> Optional[GroupHandle]:
         cands = [
             g for g in self.groups.values()
-            if g.stage == "decode" and g.tier in (tier, None)
+            if g.alive and g.stage == "decode" and g.tier in (tier, None)
         ]
         if not cands:
-            cands = [g for g in self.groups.values() if g.stage == "mixed"]
+            cands = [
+                g for g in self.groups.values()
+                if g.alive and g.stage == "mixed"
+            ]
         if not cands:
             return None
         return min(cands, key=lambda g: g.queue_len)

@@ -1,4 +1,4 @@
-"""Calibrated serving simulator with two interchangeable engines.
+"""Calibrated event-driven serving simulator.
 
 Replays 10-minute traces at full cluster scale against the analytic profile
 model (profiles/perf_model.py, same constants as the dry-run roofline). This
@@ -16,16 +16,23 @@ Execution model per group (one TP group of `tp` chips):
     ~ms for Nitsum (zero-copy weights + pipelined KV migration), seconds to
     tens of seconds for the straw-men (weight reload, per-page migration).
 
-Engines (docs/simulator.md):
-  * ``engine="event"`` (default): next-event time advance. Each group arms
-    its next boundary event (prefill completion, earliest decode finish,
-    unblock, context-drift refresh) and the engine jumps straight to it,
-    integrating decode token gain analytically over the interval. ~10-40x
-    faster than the fluid reference at equivalent goodput (the equivalence
-    harness in repro.testing.sim_equivalence checks this per policy).
-  * ``engine="fluid"``: the original fixed-``dt`` fluid-tick reference loop,
-    kept as ground truth for the event engine and for the
-    benchmarks/sim_throughput.py speedup measurement.
+Engine (docs/simulator.md): next-event time advance. Each group arms its
+next boundary event (prefill completion, earliest decode finish, unblock,
+context-drift refresh) and the engine jumps straight to it, integrating
+decode token gain analytically over the interval. The original fixed-``dt``
+fluid-tick reference loop was retired after two consecutive green
+equivalence PRs (ROADMAP); the recorded golden trajectories in
+repro.testing.sim_equivalence now serve as the regression gate, and
+``grid_parity`` (arrivals/finish stamps snapped to the old ``dt`` grid) is
+kept ON so those goldens remain comparable across PRs.
+
+Faults (docs/faults.md): a workload may carry seeded
+:class:`~repro.traces.workload.FaultEvent` s — chip/host loss, KV loss,
+stragglers, recovery. The engine applies them at their fire times: victim
+groups are torn down (their resident sequences restart through the
+admission/spill path), the policy gets a forced ``on_fault`` replan over
+the degraded pool, and recoveries re-grow the pool with weight-reload
+storms charged to newly formed groups.
 """
 from __future__ import annotations
 
@@ -40,6 +47,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.goodput import GoodputMeter, RequestRecord, SLOTier
+from repro.core.incidents import analyze_incidents
 from repro.core.migration import MigrationModel
 from repro.core.planner import Planner, PlannerInputs, TierDemand
 from repro.profiles.perf_model import PerfModel
@@ -383,19 +391,6 @@ class DecodeBatch:
             self._refresh_prefix(b)
         return self._pfx_min_rem
 
-    def advance_fluid(self, gain: float, b: int) -> List[SimReq]:
-        """Fluid-tick semantics: apply gain, remove+return finishers
-        (seed condition: tokens >= output_len, no epsilon)."""
-        self.gain(gain, b)
-        if self._pfx_b == b and self._pfx_min_rem > 0.0:
-            return []
-        self._materialize()
-        data = self._data
-        idx = np.nonzero(data[0, :b] >= data[1, :b])[0]
-        if len(idx) == 0:
-            return []
-        return self.remove_indices(idx)
-
     def sync(self) -> None:
         self._materialize()
         toks = self._data[self._TOK]
@@ -417,7 +412,7 @@ class Group:
         "gid", "spec", "sim", "prefill_q", "cur", "decode", "blocked_until",
         "batch_cap", "t_sync", "_epoch", "_ev_kind", "_step", "_batch_n",
         "_decode_active", "kv_tokens", "kv_seqs", "kv_capacity_bytes",
-        "_static_cap", "_kv_win",
+        "_static_cap", "_kv_win", "slow_factor",
     )
 
     def __init__(self, gid: int, spec: GroupSpec, sim: "Simulator"):
@@ -444,6 +439,9 @@ class Group:
         self.kv_tokens: float = 0.0
         self.kv_seqs: int = 0
         self.kv_capacity_bytes: float = sim.perf.kv_capacity_bytes(spec.tp)
+        # straggler fault: >1.0 scales every step/prefill time until the
+        # fault window ends (docs/faults.md)
+        self.slow_factor: float = 1.0
         # --- event-engine state ---
         self.t_sync: float = sim.now  # decode/prefill integrated up to here
         self._epoch: int = 0  # invalidates stale heap entries
@@ -553,44 +551,14 @@ class Group:
         return self.prefill_q.pop_best()
 
     # ------------------------------------------------------------------
-    # fluid engine: fixed-dt tick (reference semantics)
-    # ------------------------------------------------------------------
-    def tick(self, now: float, dt: float) -> None:
-        if now < self.blocked_until:
-            return
-        budget = dt
-        # ---- prefill (preempts decode in mixed groups) ----
-        if self.spec.stage in ("prefill", "mixed"):
-            while budget > 1e-12:
-                if self.cur is None:
-                    if not self.prefill_q:
-                        break
-                    self._start_prefill()
-                take = min(budget, self.cur.prefill_left_s)
-                self.cur.prefill_left_s -= take
-                budget -= take
-                if self.cur.prefill_left_s <= 1e-12:
-                    self.sim.on_prefill_done(self.cur, self, now + (dt - budget))
-                    self.cur = None
-        # ---- decode ----
-        if self.spec.stage in ("decode", "mixed") and len(self.decode) and budget > 1e-12:
-            self.refresh_cap()
-            b = self.decode.batch_len
-            ctx = self.decode.mean_ctx(b)
-            step = self.sim.perf.decode_step_time_s(b, ctx, self.spec.tp)
-            gain = budget / step
-            self._kv_charge(gain * b, 0)  # batch members' ctx grows
-            for r in self.decode.advance_fluid(gain, b):
-                r.finish_s = now + dt
-                self.sim.on_finish(r)
-
-    # ------------------------------------------------------------------
     # event engine: analytic advance + next-boundary computation
     # ------------------------------------------------------------------
     def advance_to(self, t: float) -> None:
         """Integrate state from ``t_sync`` to ``t``. The engine guarantees no
         boundary (prefill completion, decode finish, unblock) lies strictly
-        inside the interval, so a single regime applies throughout."""
+        inside the interval, so a single regime applies throughout — fault
+        application advances every group to the fault time before changing
+        ``slow_factor``, keeping intervals regime-homogeneous."""
         if t <= self.t_sync:
             return
         if self.t_sync < self.blocked_until:
@@ -599,9 +567,11 @@ class Group:
                 return
         dt = t - self.t_sync
         if self.spec.stage in ("prefill", "mixed") and self.cur is not None:
-            self.cur.prefill_left_s = max(self.cur.prefill_left_s - dt, 0.0)
+            self.cur.prefill_left_s = max(
+                self.cur.prefill_left_s - dt / self.slow_factor, 0.0
+            )
         elif self._decode_active and len(self.decode):
-            gain = dt / self._step
+            gain = dt / self._step  # _step already carries slow_factor
             self.decode.gain(gain, self._batch_n)
             self._kv_charge(gain * self._batch_n, 0)
         self.t_sync = t
@@ -626,14 +596,15 @@ class Group:
                 cur = self._start_prefill()
             if cur is not None:
                 self._ev_kind = "prefill"
-                return base + cur.prefill_left_s
+                return base + cur.prefill_left_s * self.slow_factor
         if stage != "prefill" and decode.batch_len:
             self.refresh_cap()
         b = decode.batch_len
         if b and stage != "prefill":  # decode | mixed
             ctx = decode.mean_ctx(b)
-            step = self._step = self.sim.perf.decode_step_time_s(
-                b, ctx, self.spec.tp
+            step = self._step = (
+                self.sim.perf.decode_step_time_s(b, ctx, self.spec.tp)
+                * self.slow_factor
             )
             self._batch_n = b
             self._decode_active = True
@@ -753,6 +724,25 @@ class Policy:
 
     def switch_cost_s(self, sim: "Simulator", group: Group) -> float:
         return 0.0
+
+    def on_fault(self, sim: "Simulator", event) -> Optional[List[GroupSpec]]:
+        """Reaction to an applied fault; returns a new group layout or None.
+
+        The base (static-baseline) reaction is deliberately naive — the
+        contrast the paper's robustness argument needs: losses are absorbed
+        as lost capacity (no control plane re-plans around the hole, so a
+        group's surviving chips are stranded), and on recovery the operator
+        restarts instances of the deployment's own TP on whatever chips are
+        free. NitsumPolicy overrides this with a forced planner re-solve
+        over the changed pool."""
+        if event.kind != "recovery":
+            return None
+        tp = getattr(self, "tp", None) or self.perf.min_tp(self.tps)
+        specs = [g.spec for g in sim.groups]
+        free = sim.n_chips - sum(s.tp for s in specs)
+        if free < tp:
+            return None
+        return specs + [GroupSpec(None, "mixed", tp)] * (free // tp)
 
     def route(self, sim: "Simulator", req: SimReq) -> Group:
         """Default: least-loaded compatible prefill/mixed group."""
@@ -1067,8 +1057,13 @@ class NitsumPolicy(Policy):
         t = self.tiers.get(tier) if tier else None
         d = sim.tier_stats(tier) if tier else sim.tier_stats(None)
         if t is not None:
-            return self.perf.max_prefill_rps(d.prompt_len, g.spec.tp, t.ttft_ms)
-        return self.perf.max_prefill_rps(d.prompt_len, g.spec.tp, 10_000.0)
+            rps = self.perf.max_prefill_rps(d.prompt_len, g.spec.tp, t.ttft_ms)
+        else:
+            rps = self.perf.max_prefill_rps(d.prompt_len, g.spec.tp, 10_000.0)
+        # a straggling group serves at 1/slow_factor of its profiled
+        # bandwidth: publishing the degraded rate shifts dispatch away from
+        # it for the fault window (static baselines keep routing blindly)
+        return rps / g.slow_factor
 
     def _sync_scheduler(self, sim) -> None:
         """Incremental scheduler view (ROADMAP): GroupHandles are rebuilt
@@ -1103,16 +1098,43 @@ class NitsumPolicy(Policy):
             h.queue_len = g.queue_len
             h.kv_free_frac = sim.kv_free_frac(g)
 
+    def on_fault(self, sim, event):
+        """Forced replan: re-solve the plan over the changed chip pool,
+        bypassing the hysteresis streak (a fault is a step change, not
+        demand noise). Also invalidates the scheduler's bandwidth signature
+        so straggler slowdowns reach the dispatch view immediately."""
+        self._gain_streak = 0
+        self._sync_sig = None
+        if not self.dynamic_tp:
+            return super().on_fault(sim, event)
+        specs = self._mk_plan_with_shared(sim)
+        self._cur_specs = specs
+        return specs
+
     def route(self, sim, req: SimReq) -> Group:
         if not self.slo_aware:
             return super().route(sim, req)
         self._sync_scheduler(sim)
         rate_cost = 1.0
-        h, feasible = self.gs.dispatch(req.tr.tier, rate_cost, req.background)
-        req.feasible = feasible
-        req.rate_cost = rate_cost
-        req.dispatch_gid = h.gid
-        return sim.group_by_id(h.gid)
+        for _ in range(2):
+            h, feasible = self.gs.dispatch(req.tr.tier, rate_cost, req.background)
+            g = sim._by_gid.get(h.gid)
+            if g is not None:
+                req.feasible = feasible
+                req.rate_cost = rate_cost
+                req.dispatch_gid = h.gid
+                return g
+            # stale handle: the group was torn down (fault/teardown race)
+            # after the handle snapshot — release the commitment the failed
+            # dispatch just took, flag the handle dead, and re-dispatch to
+            # a live group instead of dropping the request
+            if feasible and not req.background:
+                self.gs.complete(h.gid, rate_cost)
+            self.gs.mark_dead(h.gid)
+        req.feasible = True
+        req.rate_cost = 0.0
+        req.dispatch_gid = None
+        return super().route(sim, req)
 
 
 class OraclePolicy(Policy):
@@ -1179,10 +1201,28 @@ class SimResult:
     # (t, cumulative reconfigurations) per second — the scenario matrix
     # plots reconfiguration activity against the workload's phase structure
     reconfig_timeline: List[Tuple[float, int]] = field(default_factory=list)
+    # ---- fault/recovery accounting (docs/faults.md) ----
+    # one entry per applied FaultEvent: kind, fire time, victims, chips
+    # lost/restored, sequences restarted
+    fault_timeline: List[dict] = field(default_factory=list)
+    # per-tier count of resident sequences force-restarted by faults
+    fault_restarts: Dict[str, int] = field(default_factory=dict)
+    # per-incident recovery metrics (core/incidents.py): baseline goodput,
+    # dip depth/width, time-to-recover, per-tier SLO damage
+    incidents: List[dict] = field(default_factory=list)
+    # per-tier (t, SLO-good finishes in the last second) series — what the
+    # per-tier SLO-damage numbers in `incidents` are computed from
+    tier_timelines: Dict[str, List[Tuple[float, float]]] = field(
+        default_factory=dict
+    )
 
     @property
     def spill_total(self) -> int:
         return sum(self.spills.values())
+
+    @property
+    def fault_restart_total(self) -> int:
+        return sum(self.fault_restarts.values())
 
 
 class Simulator:
@@ -1201,11 +1241,21 @@ class Simulator:
         kv_watermark: float = 0.9,
         kv_audit: bool = False,
     ):
-        if engine not in ("event", "fluid"):
-            raise ValueError(f"unknown engine {engine!r}")
+        if engine != "event":
+            raise ValueError(
+                f"unknown engine {engine!r}: the fluid reference engine was "
+                "retired (docs/simulator.md); only 'event' remains, gated by "
+                "the recorded golden trajectories in "
+                "repro.testing.sim_equivalence"
+            )
         self.perf = perf
         self.tiers = {t.name: t for t in tiers}
+        # n_chips tracks the LIVE pool: chip/host-loss faults shrink it,
+        # recoveries restore it (never beyond chips_total, the provisioned
+        # size). Policies plan against n_chips, so a forced replan after a
+        # fault naturally solves over the degraded pool.
         self.n_chips = n_chips
+        self.chips_total = n_chips
         self.policy = policy
         self.dt = dt
         self.window_s = window_s
@@ -1244,6 +1294,14 @@ class Simulator:
         self.last_planning_ms = 0.0
         self.reconfig_count = 0
         self._tier_defaults: Dict[Optional[str], TierDemand] = {}
+        # fault machinery (docs/faults.md)
+        self.fault_log: List[dict] = []
+        self.fault_restarts: Dict[str, int] = {t.name: 0 for t in tiers}
+        self.tier_timelines: Dict[str, List[Tuple[float, float]]] = {
+            t.name: [] for t in tiers
+        }
+        self._tier_win_good: Dict[str, int] = {t.name: 0 for t in tiers}
+        self._fault_heap: List[tuple] = []  # (t, seq, FaultEvent | end-marker)
         # event-engine machinery
         self._heap: List[tuple] = []
         self._seq = count()
@@ -1266,12 +1324,25 @@ class Simulator:
             timeline=list(self.timeline),
             spill_timeline=list(self.spill_timeline),
             reconfig_timeline=list(self.reconfig_timeline),
+            fault_timeline=list(self.fault_log),
+            fault_restarts=dict(self.fault_restarts),
+            incidents=analyze_incidents(
+                self.timeline, self.tier_timelines, self.fault_log, horizon_s
+            ),
+            tier_timelines={t: list(tl) for t, tl in self.tier_timelines.items()},
         )
 
     def group_by_id(self, gid: int) -> Group:
         g = self._by_gid.get(gid)
         if g is not None:
             return g
+        # stale gid (group torn down since the caller snapshotted it): fall
+        # back to a live prefill-capable group, never an arbitrary one —
+        # the old groups[0] fallback could hand a decode-only group a
+        # prefill and strand it
+        for g in self.groups:
+            if g.spec.stage in ("prefill", "mixed"):
+                return g
         return self.groups[0]
 
     def _recent_push(self, tr: TraceRequest) -> None:
@@ -1317,7 +1388,15 @@ class Simulator:
         span = max(self.monitor_window_s, 1e-6)
         return TierDemand(rps=n / span, prompt_len=int(sp / n), output_len=int(so / n))
 
-    def _apply_specs(self, specs: List[GroupSpec], charge_cost: bool) -> None:
+    def _apply_specs(
+        self, specs: List[GroupSpec], charge_cost: bool, reload_s: float = 0.0
+    ) -> None:
+        """``reload_s`` > 0 models a recovery weight-reload storm: newly
+        created groups (chips rejoining the pool, or groups re-formed
+        around them) must load weights from host storage before serving —
+        they block for at least that long on top of the policy's own
+        switch cost. Groups whose spec survives the reconfiguration are
+        kept as-is and pay nothing."""
         old = self.groups
         key = lambda s: (s.tier or "", s.stage, s.tp)
         if old and sorted(specs, key=key) == sorted((g.spec for g in old), key=key):
@@ -1337,7 +1416,9 @@ class Simulator:
                 g = Group(self._gid, spec, self)
                 self._gid += 1
                 if charge_cost and old:
-                    g.blocked_until = self.now + self.policy.switch_cost_s(self, g)
+                    g.blocked_until = self.now + max(
+                        self.policy.switch_cost_s(self, g), reload_s
+                    )
                 new_groups.append(g)
         # redistribute requests from dissolved groups
         orphans: List[SimReq] = []
@@ -1349,6 +1430,13 @@ class Simulator:
         self.groups = new_groups
         self._by_gid = {g.gid: g for g in new_groups}
         self._groups_ver += 1
+        # flag dissolved groups in the scheduler view immediately — dispatch
+        # between this teardown and the next handle rebuild must not route
+        # to a gid that no longer exists (the stale-handle bug)
+        gs = getattr(self.policy, "gs", None)
+        if gs is not None:
+            for g in pool:
+                gs.mark_dead(g.gid)
         for r in orphans:
             if r.tokens > 0 or r.first_token_s is not None:
                 tgt = self.policy.decode_target(self, r, self.groups[0])
@@ -1383,7 +1471,7 @@ class Simulator:
             ctx = group._kv_ctx(req)
             group._kv_charge(-ctx, -1)
             tgt._kv_charge(ctx, 1)
-        if self.engine == "event" and tgt is not group:
+        if tgt is not group:
             tgt.advance_to(self.now)
             touched = tgt.add_decode(req)
             req.group = tgt
@@ -1409,6 +1497,8 @@ class Simulator:
         self.meter.add(rec)
         if self.meter.meets_slo(rec):
             self._win_good += 1
+            tw = self._tier_win_good
+            tw[req.tr.tier] = tw.get(req.tr.tier, 0) + 1
 
     # ---- shared run setup ------------------------------------------------
     def _setup(self, workload: Workload) -> List[TraceRequest]:
@@ -1450,8 +1540,7 @@ class Simulator:
         # window-clamped, consistent with the capacity model and the
         # occupancy charges
         need = perf.seq_kv_bytes(req.tr.prompt_len)
-        if self.engine == "event":
-            g.advance_to(self.now)  # occupancy integrated up to the arrival
+        g.advance_to(self.now)  # occupancy integrated up to the arrival
         if g.kv_projected_bytes() + need <= self.kv_watermark * g.kv_capacity_bytes:
             return g
         self.spill_counts[req.tr.tier] = self.spill_counts.get(req.tr.tier, 0) + 1
@@ -1462,8 +1551,7 @@ class Simulator:
                 continue
             if cand.spec.tier not in (None, tier):
                 continue
-            if self.engine == "event":
-                cand.advance_to(self.now)
+            cand.advance_to(self.now)
             free = (
                 self.kv_watermark * cand.kv_capacity_bytes
                 - cand.kv_projected_bytes()
@@ -1490,7 +1578,7 @@ class Simulator:
         req = SimReq(tr, background=tr.tier in self._bg_tiers)
         g = self.policy.route(self, req)
         g = self._kv_backpressure(req, g)
-        if self.engine == "event" and g._ev_kind not in ("prefill", "unblock"):
+        if g._ev_kind not in ("prefill", "unblock"):
             # an armed prefill/unblock event is unaffected by a queue append;
             # otherwise (idle, or decoding that prefill now preempts) re-arm
             g.advance_to(self.now)
@@ -1501,40 +1589,160 @@ class Simulator:
         g.prefill_q.append(req)
         req.group = g
 
-    # ---- main loops --------------------------------------------------------
-    def run(self, workload: Workload, drain_s: float = 60.0) -> GoodputMeter:
-        if self.engine == "fluid":
-            return self._run_fluid(workload, drain_s)
-        return self._run_event(workload, drain_s)
+    # ---- fault injection (docs/faults.md) --------------------------------
+    def _pick_victims(self, seed: int, chips: int) -> List[Group]:
+        """Deterministic victim selection: a seeded permutation over the
+        groups (sorted by gid — insertion order is an implementation
+        detail), accumulating whole groups until ``chips`` are covered."""
+        pool = sorted(self.groups, key=lambda g: g.gid)
+        if not pool:
+            return []
+        order = np.random.RandomState(seed).permutation(len(pool))
+        victims: List[Group] = []
+        got = 0
+        for idx in order:
+            if got >= chips:
+                break
+            victims.append(pool[idx])
+            got += pool[idx].spec.tp
+        return victims
 
-    def _run_fluid(self, workload: Workload, drain_s: float) -> GoodputMeter:
-        arrivals = deque(self._setup(workload))
-        horizon = workload.horizon_s + drain_s
-        next_window = self.window_s
-        next_second = 1.0
-        while self.now < horizon:
-            while arrivals and arrivals[0].arrival_s <= self.now:
-                self._admit(arrivals.popleft())
-            self._recent_expire()
-            for g in self.groups:
-                g.tick(self.now, self.dt)
-            if self.kv_audit:
-                self._kv_audit_check()
-            self.now += self.dt
-            if self.now >= next_second:
-                self.timeline.append((self.now, self._win_good / 1.0))
-                self.spill_timeline.append(
-                    (self.now, sum(self.spill_counts.values()))
+    def _fault_restart(self, r: SimReq) -> None:
+        """Re-admit a sequence whose group died or dumped its KV: full
+        restart semantics — the prompt must re-prefill from token zero
+        (its KV is gone) while the SLO clock keeps running from the
+        original arrival. Routing goes through the policy + the PR-2
+        admission/spill path, so restart storms spread by KV headroom and
+        demote to best-effort exactly like arrival bursts do."""
+        gs = getattr(self.policy, "gs", None)
+        if gs is not None and r.dispatch_gid is not None and r.first_token_s is None:
+            # the request never reached on_prefill_done, so its dispatch
+            # commitment is still held — release it before re-dispatching
+            gs.complete(r.dispatch_gid, r.rate_cost)
+        r.dispatch_gid = None
+        r.tokens = 0.0
+        r.first_token_s = None
+        r.prefill_left_s = 0.0
+        r._penalty = 0.0
+        r.group = None
+        if not r.background:
+            r.feasible = True
+        self.fault_restarts[r.tr.tier] = self.fault_restarts.get(r.tr.tier, 0) + 1
+        g = self.policy.route(self, r)
+        g = self._kv_backpressure(r, g)
+        g.prefill_q.append(r)
+        r.group = g
+
+    def _kill_groups(self, victims: List[Group]) -> List[SimReq]:
+        """Tear down groups (fault path): collect their resident sequences,
+        drop them from the pool, and flag their scheduler handles dead.
+        Restarting the orphans is the caller's job — it happens AFTER the
+        policy's forced replan, so restarts route into the new layout."""
+        dead = {g.gid for g in victims}
+        orphans: List[SimReq] = []
+        for g in victims:
+            orphans.extend(g.clear())
+            g._epoch += 1  # invalidate any armed heap events
+        self.groups = [g for g in self.groups if g.gid not in dead]
+        self._by_gid = {g.gid: g for g in self.groups}
+        self._groups_ver += 1
+        gs = getattr(self.policy, "gs", None)
+        if gs is not None:
+            for gid in dead:
+                gs.mark_dead(gid)
+        return orphans
+
+    def _apply_fault(self, ev) -> None:
+        """Apply one FaultEvent at ``self.now`` (== ev.t_s)."""
+        for g in self.groups:
+            g.advance_to(self.now)
+        entry = {"t": self.now, "kind": ev.kind}
+        orphans: List[SimReq] = []
+        reload_s = 0.0
+        if ev.kind in ("chip_loss", "host_loss"):
+            # lose exactly `chips` chips (clamped to keep the pool alive);
+            # every group holding a lost chip dies whole, and its surviving
+            # chips are stranded until a replan re-forms groups around them
+            lost = min(max(ev.chips, 1), max(self.n_chips - 1, 0))
+            victims = self._pick_victims(ev.seed, lost)
+            self.n_chips -= lost
+            orphans = self._kill_groups(victims)
+            entry.update(
+                chips_lost=lost,
+                victim_gids=sorted(g.gid for g in victims),
+                restarts=len(orphans),
+            )
+        elif ev.kind == "kv_loss":
+            victims = self._pick_victims(ev.seed, 1)
+            for g in victims:
+                orphans.extend(g.clear())  # zeroes the group's KV counters
+            entry.update(
+                victim_gids=sorted(g.gid for g in victims),
+                restarts=len(orphans),
+            )
+        elif ev.kind == "straggler":
+            victims = self._pick_victims(ev.seed, 1)
+            for g in victims:
+                g.slow_factor = max(ev.slowdown, 1.0)
+                heapq.heappush(
+                    self._fault_heap,
+                    (self.now + ev.duration_s, next(self._seq),
+                     ("straggler_end", g.gid)),
                 )
-                self.reconfig_timeline.append((self.now, self.reconfig_count))
-                self._win_good = 0
-                next_second += 1.0
-            if self.now >= next_window:
-                specs = self.policy.window(self)
-                if specs is not None:
-                    self._apply_specs(specs, charge_cost=True)
-                next_window += self.window_s
-        return self.meter
+            entry.update(
+                victim_gids=sorted(g.gid for g in victims),
+                slowdown=ev.slowdown, duration_s=ev.duration_s,
+            )
+        elif ev.kind == "recovery":
+            restored = min(ev.chips, self.chips_total - self.n_chips)
+            self.n_chips += restored
+            # rejoined chips hold no weights: any group formed in reaction
+            # pays a full host-to-HBM reload (the recovery storm)
+            reload_s = self.perf.n_params * self.perf.dtype_bytes / 1e9
+            entry.update(chips_restored=restored, reload_s=reload_s)
+        else:
+            raise ValueError(f"unknown fault kind {ev.kind!r}")
+        self.fault_log.append(entry)
+        # forced policy reaction over the changed pool (Nitsum replans;
+        # static baselines degrade naively / naively rebuild on recovery)
+        specs = self.policy.on_fault(self, ev)
+        if specs is not None:
+            self._apply_specs(specs, charge_cost=True, reload_s=reload_s)
+        if not self.groups:
+            # the whole serving pool died and the policy did not rebuild:
+            # restart instances on whatever chips survive
+            self._apply_specs(
+                self.policy.initial_specs(self), charge_cost=False,
+            )
+        for r in orphans:
+            self._fault_restart(r)
+        for g in self.groups:
+            self._schedule_group(g)
+        if self.kv_audit:
+            self._kv_audit_check()
+
+    def _end_straggler(self, gid: int) -> None:
+        g = self._by_gid.get(gid)
+        if g is None:
+            return  # victim was dissolved (replan/fault) before recovering
+        g.advance_to(self.now)
+        g.slow_factor = 1.0
+        self.fault_log.append({"t": self.now, "kind": "straggler_end",
+                               "victim_gids": [gid]})
+        gs = getattr(self.policy, "gs", None)
+        if gs is not None and hasattr(self.policy, "_sync_sig"):
+            self.policy._sync_sig = None  # republish full bandwidth
+        self._schedule_group(g)
+
+    def _apply_fault_action(self, action) -> None:
+        if isinstance(action, tuple) and action[0] == "straggler_end":
+            self._end_straggler(action[1])
+        else:
+            self._apply_fault(action)
+
+    # ---- main loop -------------------------------------------------------
+    def run(self, workload: Workload, drain_s: float = 60.0) -> GoodputMeter:
+        return self._run_event(workload, drain_s)
 
     # ---- event engine ----------------------------------------------------
     def _schedule_group(self, g: Group) -> None:
@@ -1622,7 +1830,9 @@ class Simulator:
         horizon = workload.horizon_s + drain_s
         i, n = 0, len(arr)
         if self.grid_parity:
-            # parity: the fluid reference only admits arrivals at tick starts
+            # golden-trajectory stability: admit arrivals at dt-grid starts
+            # (the retired fluid reference's tick grid, which the recorded
+            # goldens embed — see the module docstring)
             dt = self.dt
             adm = [math.ceil(r.arrival_s / dt - 1e-9) * dt for r in arr]
         else:
@@ -1630,16 +1840,21 @@ class Simulator:
         next_window = self.window_s
         next_second = 1.0
         self._heap = []
+        self._fault_heap = []
+        for ev in workload.faults:
+            heapq.heappush(self._fault_heap, (ev.t_s, next(self._seq), ev))
         for g in self.groups:
             self._schedule_group(g)
         INF = math.inf
         peek = self._peek_group_event
         handle = self._handle_group_event
         admit = self._admit
+        faults = self._fault_heap
         while True:
             t_grp = peek()
             t_arr = adm[i] if i < n else INF
-            t = min(t_arr, t_grp, next_window, next_second)
+            t_flt = faults[0][0] if faults else INF
+            t = min(t_arr, t_grp, next_window, next_second, t_flt)
             if t >= horizon:
                 break
             self.now = t
@@ -1647,6 +1862,10 @@ class Simulator:
                 while i < n and adm[i] <= t:
                     admit(arr[i])
                     i += 1
+                t_grp = peek()
+            while faults and faults[0][0] <= t:
+                _, _, action = heapq.heappop(faults)
+                self._apply_fault_action(action)
                 t_grp = peek()
             while t_grp <= t:
                 handle()
@@ -1657,6 +1876,10 @@ class Simulator:
                 self.spill_timeline.append((t, sum(self.spill_counts.values())))
                 self.reconfig_timeline.append((t, self.reconfig_count))
                 self._win_good = 0
+                tw = self._tier_win_good
+                for tier, tl in self.tier_timelines.items():
+                    tl.append((t, float(tw.get(tier, 0))))
+                    tw[tier] = 0
                 next_second += 1.0
             if t >= next_window:
                 self._window_boundary()

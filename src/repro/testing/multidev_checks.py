@@ -11,6 +11,10 @@ Checks:
       rebinds buffers zero-copy (pointer-identical shards).
   moe_sharded  — shard_map EP MoE == local oracle.
   migration    — KV cache resharding across TP meshes preserves contents.
+  fault_abort  — mid-flight aborts (docs/faults.md): a switch interrupted
+      by a fault rolls back transactionally, a migration whose source dies
+      leaves the original cache intact, and a weight reload on a shrunken
+      pool (WeightStore.shrink) still serves correct logits.
 """
 import os
 import sys
@@ -189,6 +193,94 @@ def check_migration() -> None:
     print(f"migration: contents preserved across TP meshes ({dt*1e3:.2f} ms)")
 
 
+def check_fault_abort() -> None:
+    from repro.core.migration import MigrationAborted
+    from repro.core.tp_switch import SwitchAborted, TPSwitchController
+
+    cfg = _tiny_cfg()
+    devices = jax.devices()
+    canon_defs = model_param_defs(cfg, make_exec_config(cfg, 1))
+    canonical = init_params(canon_defs, jax.random.PRNGKey(0), jnp.float32)
+    store = WeightStore(cfg, canon_defs, RULES, devices, storage_tp=1)
+    B, S = 8, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+
+    def serve(store, storage, tp, mesh):
+        sel = store.select_fn(tp, mesh)
+        ec = make_exec_config(cfg, tp)
+
+        def step(storage, tokens):
+            params = sel(storage)
+            h, _, _ = forward(params, cfg, ec, rules=RULES, mesh=mesh,
+                              tokens=tokens, mode="prefill",
+                              block_q=16, block_k=16)
+            return logits_for(params, cfg, h, RULES, mesh)
+
+        tok_sh = jax.device_put(tokens, NamedSharding(mesh, P("data", None)))
+        return np.asarray(jax.jit(step)(storage, tok_sh))[..., : cfg.vocab_size]
+
+    # reference logits at TP=1 on the full pool
+    ref = serve(store, store.build(canonical, make_exec_mesh(devices, 1)),
+                1, make_exec_mesh(devices, 1))
+
+    # 1. switch interrupted by a fault: transactional rollback
+    ctl = TPSwitchController(store, devices, (1, 2, 4))
+    ctl.install(canonical, 1)
+    storage_before = ctl.storage
+
+    def dying_migrate(mesh):
+        raise RuntimeError("device lost mid-migration")
+
+    try:
+        ctl.switch(2, migrate_fn=dying_migrate)
+        raise AssertionError("switch did not abort")
+    except SwitchAborted:
+        pass
+    assert ctl.current_tp == 1 and ctl.storage is storage_before
+    assert ctl.stats.n_aborts == 1 and ctl.stats.n_switches == 0
+    # serving at the rolled-back TP still matches the reference
+    np.testing.assert_allclose(
+        serve(store, ctl.storage, 1, ctl.meshes[1]), ref,
+        rtol=2e-4, atol=2e-4,
+    )
+    ctl.switch(2)  # retry after the fault clears
+    assert ctl.current_tp == 2 and ctl.stats.n_switches == 1
+    print("fault_abort: interrupted switch rolled back, retry succeeded")
+
+    # 2. migration whose target is invalid: original cache untouched
+    ec_lo = make_exec_config(cfg, 1)
+    cache_defs = init_cache_defs(cfg, ec_lo, B, 32)
+    cache = init_params(cache_defs, jax.random.PRNGKey(2), jnp.float32)
+    cache = jax.tree_util.tree_map(
+        lambda x: jnp.arange(x.size, dtype=jnp.float32).reshape(x.shape), cache
+    )
+    sh_lo = cache_shardings(cache_defs, RULES, make_exec_mesh(devices, 1))
+    cache_lo = jax.tree_util.tree_map(jax.device_put, cache, sh_lo)
+    bad_sh = jax.tree_util.tree_map(lambda _: object(), sh_lo)
+    try:
+        migrate_cache(cache_lo, bad_sh)
+        raise AssertionError("migration did not abort")
+    except MigrationAborted:
+        pass
+    for a, b in zip(
+        jax.tree_util.tree_leaves(cache), jax.tree_util.tree_leaves(cache_lo)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("fault_abort: aborted migration left the source cache intact")
+
+    # 3. weight reload on a shrunken pool (lost one 4-chip host)
+    survivors = devices[: len(devices) // 2]
+    small = store.shrink(survivors)
+    assert small.N == len(survivors) and small.bytes_per_device() > 0
+    mesh_small = make_exec_mesh(survivors, 2)
+    reloaded = small.build(canonical, mesh_small)  # the reload storm
+    np.testing.assert_allclose(
+        serve(small, reloaded, 2, mesh_small), ref, rtol=2e-4, atol=2e-4,
+    )
+    print(f"fault_abort: reload on {small.N}-chip shrunken pool serves "
+          "identical logits")
+
+
 def check_engine() -> None:
     """End-to-end: serving with mid-stream TP switches must produce the same
     greedy trajectories as a fixed-TP run (the switch is semantically
@@ -291,6 +383,7 @@ CHECKS = {
     "weight_store": check_weight_store,
     "moe_sharded": check_moe_sharded,
     "migration": check_migration,
+    "fault_abort": check_fault_abort,
     "engine": check_engine,
     "train_step": check_train_step,
 }

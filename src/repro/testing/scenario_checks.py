@@ -96,6 +96,9 @@ def check_determinism(
         for r in wl.requests
     ]
     assert key(a) == key(b), f"{spec.name}: same seed produced different traces"
+    assert a.faults == b.faults, (
+        f"{spec.name}: same seed realized different fault schedules"
+    )
     c = spec.build(seed=seed + 1, horizon_s=horizon_s, rps_scale=rps_scale)
     assert key(a) != key(c), (
         f"{spec.name}: different seeds produced identical traces"

@@ -1,128 +1,248 @@
-"""Engine-equivalence harness: event-driven vs fluid-tick reference.
+"""Golden-trajectory regression harness for the event-driven simulator.
 
-The event engine (serving/simulator.py, ``engine="event"``) must reproduce
-the fluid-tick reference's *results* — per-policy goodput on seeded
-workloads — while being an order of magnitude faster. This module runs the
-same (policy, workload, cluster) configuration through both engines and
-reports per-policy relative goodput error plus supporting detail (per-tier
-goodput, finished-request counts, wall-clock).
+Successor of the event-vs-fluid equivalence harness: the fluid-tick
+reference engine was retired after two consecutive green parity PRs
+(ROADMAP carried item), so "matches the reference engine" is no longer a
+checkable property. What replaces it is a set of **recorded golden
+trajectories**: seeded replay cases whose summary statistics (goodput,
+per-tier goodput, finished counts, spills) are committed to
+``benchmarks/results/sim_golden.json``. Every case is bit-deterministic —
+seeded traces, seeded fault schedules, no wall-clock dependence — so any
+drift beyond tolerance is a real behavioural change: either a bug, or an
+intentional change that must consciously re-record the goldens:
 
-Used by tests/test_sim_equivalence.py (CI gate: |rel err| <= 2%) and by
-benchmarks/sim_throughput.py (records parity next to the speedup numbers).
+    PYTHONPATH=src python -m repro.testing.sim_equivalence --record
+
+The case set spans the regimes the old parity suite pinned (short-context
+two-tier, long-context KV backpressure, non-stationary scenarios) plus the
+fault families (docs/faults.md) — fault-path changes are regression-gated
+here, with ``kv_audit=True`` so every golden replay also proves exact KV
+conservation under forced frees.
+
+Used by tests/test_sim_equivalence.py (CI gate: goodput within
+``DEFAULT_RTOL`` of the golden per case).
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+import argparse
+import json
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence
 
-from repro.core.goodput import SLOTier
+from repro.configs import get_config
 from repro.profiles.perf_model import PerfModel, clear_perf_caches
-from repro.serving.simulator import run_system
-from repro.traces.workload import Workload
+from repro.profiles.slo import derive_tiers
+from repro.serving.simulator import SimResult, run_system
+from repro.traces.scenarios import FAULT_SCENARIOS, get_scenario
+from repro.traces.servegen import servegen_longctx, servegen_two_tier
 
-DEFAULT_SYSTEMS = ("nitsum", "sglang")
+MODEL = "llama3-8b"
+N_CHIPS = 16
 DEFAULT_RTOL = 0.02
+GOLDEN_PATH = (
+    Path(__file__).resolve().parents[3] / "benchmarks" / "results"
+    / "sim_golden.json"
+)
+
+_SHORT_TIERS = dict(prompt_len=900, ctx_len=1000)
+_LONG_TIERS = dict(prompt_len=14000, ctx_len=15000)
 
 
-@dataclass
-class EquivalenceResult:
-    system: str
-    goodput_event: float
-    goodput_fluid: float
-    rel_err: float
-    per_tier_event: Dict[str, float] = field(default_factory=dict)
-    per_tier_fluid: Dict[str, float] = field(default_factory=dict)
-    finished_event: int = 0
-    finished_fluid: int = 0
-    wall_event_s: float = 0.0
-    wall_fluid_s: float = 0.0
-    # per-tier KV-backpressure admission spills (SimResult.spills); both
-    # engines must agree qualitatively: zero stays zero, pressure engages
-    # in both or neither
-    spills_event: Dict[str, int] = field(default_factory=dict)
-    spills_fluid: Dict[str, int] = field(default_factory=dict)
+def _case_library() -> Dict[str, Callable[[], dict]]:
+    """name -> factory for one replay case. Factories are lazy so importing
+    the module never builds traces. ``fast`` cases run in the default CI
+    lane; the rest only in the slow lane (tests/test_sim_equivalence.py)."""
+    cases: Dict[str, Callable[[], dict]] = {}
 
-    @property
-    def spill_total_event(self) -> int:
-        return sum(self.spills_event.values())
+    def add(name: str, fast: bool, **kw) -> None:
+        factory = dict(kw)
 
-    @property
-    def spill_total_fluid(self) -> int:
-        return sum(self.spills_fluid.values())
+        def build(factory=factory):
+            spec = dict(factory)
+            spec["workload"] = spec.pop("mk_workload")()
+            return spec
 
-    @property
-    def speedup(self) -> float:
-        return self.wall_fluid_s / max(self.wall_event_s, 1e-9)
+        build.fast = fast
+        cases[name] = build
 
-    def within(self, rtol: float = DEFAULT_RTOL) -> bool:
-        return abs(self.rel_err) <= rtol
-
-    def summary(self) -> str:
-        return (
-            f"{self.system}: event={self.goodput_event:.3f} "
-            f"fluid={self.goodput_fluid:.3f} rel_err={self.rel_err:+.4f} "
-            f"spills={self.spill_total_event}/{self.spill_total_fluid} "
-            f"speedup={self.speedup:.1f}x"
+    for system in ("nitsum", "sglang"):
+        add(
+            f"two_tier/{system}", fast=True, system=system,
+            tiers_kw=_SHORT_TIERS,
+            mk_workload=lambda: servegen_two_tier(horizon_s=60.0, seed=0),
         )
-
-
-def compare_engines(
-    system: str,
-    perf: PerfModel,
-    tiers: Sequence[SLOTier],
-    n_chips: int,
-    workload: Workload,
-    cold_caches: bool = True,
-) -> EquivalenceResult:
-    """Run one policy through both engines on the same workload."""
-    out = {}
-    for engine in ("fluid", "event"):
-        if cold_caches:
-            clear_perf_caches()
-        t0 = time.perf_counter()
-        sim, meter = run_system(system, perf, tiers, n_chips, workload, engine=engine)
-        wall = time.perf_counter() - t0
-        out[engine] = (
-            meter.goodput(workload.horizon_s),
-            meter.per_tier_goodput(workload.horizon_s),
-            len(sim.finished),
-            wall,
-            dict(sim.spill_counts),
+        add(
+            f"longctx/{system}", fast=(system == "sglang"), system=system,
+            tiers_kw=_LONG_TIERS,
+            mk_workload=lambda: servegen_longctx(horizon_s=90.0, seed=0),
         )
-    ge, pte, fe, we, se = out["event"]
-    gf, ptf, ff, wf, sf = out["fluid"]
-    return EquivalenceResult(
-        system=system,
-        goodput_event=ge,
-        goodput_fluid=gf,
-        rel_err=(ge - gf) / max(gf, 1e-9),
-        per_tier_event=pte,
-        per_tier_fluid=ptf,
-        finished_event=fe,
-        finished_fluid=ff,
-        wall_event_s=we,
-        wall_fluid_s=wf,
-        spills_event=se,
-        spills_fluid=sf,
+    add(
+        "flash_crowd/nitsum", fast=True, system="nitsum",
+        tiers_kw=_SHORT_TIERS,
+        mk_workload=lambda: get_scenario("flash_crowd").build(
+            seed=0, horizon_s=60.0
+        ),
     )
-
-
-def check_equivalence(
-    perf: PerfModel,
-    tiers: Sequence[SLOTier],
-    n_chips: int,
-    workload: Workload,
-    systems: Sequence[str] = DEFAULT_SYSTEMS,
-    rtol: float = DEFAULT_RTOL,
-) -> List[EquivalenceResult]:
-    """Compare every policy; raises AssertionError on a parity violation."""
-    results = [
-        compare_engines(s, perf, tiers, n_chips, workload) for s in systems
-    ]
-    bad = [r for r in results if not r.within(rtol)]
-    if bad:
-        raise AssertionError(
-            "engine parity violated: " + "; ".join(r.summary() for r in bad)
+    for name in ("diurnal", "tier_drift", "longctx_phases", "prefill_heavy",
+                 "decode_heavy"):
+        add(
+            f"{name}/nitsum", fast=False, system="nitsum",
+            tiers_kw=_SHORT_TIERS,
+            mk_workload=lambda name=name: get_scenario(name).build(
+                seed=1, horizon_s=90.0
+            ),
         )
-    return results
+    # fault families: every golden fault replay runs with kv_audit=True, so
+    # checking the golden also proves exact KV conservation under forced
+    # frees; host_loss is in the fast lane as the representative family
+    for name in FAULT_SCENARIOS:
+        fast = name == "fault_host_loss"
+        for system in ("nitsum", "sglang"):
+            add(
+                f"{name}/{system}", fast=fast and system == "nitsum",
+                system=system, tiers_kw=_SHORT_TIERS, kv_audit=True,
+                mk_workload=lambda name=name: get_scenario(name).build(
+                    seed=0, horizon_s=180.0
+                ),
+            )
+    return cases
+
+
+CASES = _case_library()
+
+
+def list_cases(fast_only: bool = False) -> List[str]:
+    return [n for n, c in CASES.items() if c.fast or not fast_only]
+
+
+def summarize(res: SimResult) -> dict:
+    """The recorded per-case statistics. Everything here is deterministic
+    under fixed seeds; floats are rounded so the committed json is stable
+    across platforms at well below the check tolerance."""
+    return {
+        "policy": res.policy,
+        "goodput": round(res.goodput, 4),
+        "per_tier_goodput": {
+            t: round(v, 4) for t, v in sorted(res.per_tier_goodput.items())
+        },
+        "finished": res.finished,
+        "spill_total": res.spill_total,
+        "reconfig_count": res.reconfig_count,
+        "fault_restart_total": res.fault_restart_total,
+        "fault_count": len(res.fault_timeline),
+    }
+
+
+def run_case(name: str) -> dict:
+    spec = CASES[name]()
+    clear_perf_caches()
+    perf = PerfModel(get_config(MODEL))
+    tiers = derive_tiers(perf, candidate_tps=(1, 2, 4, 8), **spec["tiers_kw"])
+    wl = spec["workload"]
+    sim, _ = run_system(
+        spec["system"], perf, tiers, spec.get("n_chips", N_CHIPS), wl,
+        kv_audit=spec.get("kv_audit", False),
+    )
+    return summarize(sim.result(wl.horizon_s))
+
+
+def load_golden(path: Optional[Path] = None) -> dict:
+    p = Path(path) if path else GOLDEN_PATH
+    with open(p) as f:
+        return json.load(f)
+
+
+def check_case(
+    name: str,
+    golden: Optional[dict] = None,
+    rtol: float = DEFAULT_RTOL,
+) -> List[str]:
+    """Replay one case and compare against its golden; returns violation
+    strings (empty = green). Gate semantics:
+
+      * goodput (total and per-tier) within ``rtol`` relative;
+      * finished within max(2, rtol·golden) requests;
+      * spills agree on zero-vs-nonzero and within 2x when nonzero;
+      * fault counts exact (the schedule is part of the trace).
+    """
+    g = (golden or load_golden())["cases"][name]
+    got = run_case(name)
+    bad: List[str] = []
+
+    def rel(label: str, a: float, b: float, tol: float = rtol) -> None:
+        ref = max(abs(b), 1e-9)
+        if abs(a - b) / ref > tol:
+            bad.append(f"{name}: {label} {a} vs golden {b} (> {tol:.0%})")
+
+    rel("goodput", got["goodput"], g["goodput"])
+    for tier, v in g["per_tier_goodput"].items():
+        if v > 0.5:  # tiny per-tier rates are all noise
+            rel(f"per_tier_goodput[{tier}]",
+                got["per_tier_goodput"].get(tier, 0.0), v, tol=2 * rtol)
+    if abs(got["finished"] - g["finished"]) > max(2, rtol * g["finished"]):
+        bad.append(
+            f"{name}: finished {got['finished']} vs golden {g['finished']}"
+        )
+    gs, es = got["spill_total"], g["spill_total"]
+    if (gs == 0) != (es == 0) or (es and not 0.5 <= gs / es <= 2.0):
+        bad.append(f"{name}: spill_total {gs} vs golden {es}")
+    if got["fault_count"] != g["fault_count"]:
+        bad.append(
+            f"{name}: fault_count {got['fault_count']} != {g['fault_count']}"
+        )
+    return bad
+
+
+def record(
+    names: Optional[Sequence[str]] = None, path: Optional[Path] = None
+) -> dict:
+    """Re-run the named cases (default: all) and write the golden file,
+    preserving existing entries for cases not re-run."""
+    p = Path(path) if path else GOLDEN_PATH
+    payload = {"model": MODEL, "n_chips": N_CHIPS, "rtol": DEFAULT_RTOL,
+               "cases": {}}
+    if p.exists():
+        payload["cases"] = load_golden(p).get("cases", {})
+    for name in names or list(CASES):
+        payload["cases"][name] = run_case(name)
+        print(f"recorded {name}: {payload['cases'][name]}")
+    p.parent.mkdir(parents=True, exist_ok=True)
+    with open(p, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--record", action="store_true",
+                    help="re-run cases and rewrite the golden file")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substring filters on case names")
+    args = ap.parse_args()
+    if args.only:
+        pats = args.only.split(",")
+        names = [n for n in CASES if any(p in n for p in pats)]
+        if not names:
+            # silent zero-match reads as "everything passed"
+            raise SystemExit(
+                f"--only {args.only!r} matched no case; "
+                f"known: {sorted(CASES)}"
+            )
+    else:
+        names = list(CASES)
+    if args.record:
+        record(names)
+        return
+    golden = load_golden()
+    bad: List[str] = []
+    for n in names:
+        errs = check_case(n, golden)
+        bad += errs
+        print(f"{'FAIL' if errs else 'ok  '} {n}")
+    if bad:
+        raise SystemExit("\n".join(bad))
+
+
+if __name__ == "__main__":
+    main()

@@ -43,7 +43,13 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from repro.traces.servegen import STATS as SERVEGEN_STATS
-from repro.traces.workload import Workload, make_workload, merge_workloads
+from repro.traces.workload import (
+    FAULT_KINDS,
+    FaultEvent,
+    Workload,
+    make_workload,
+    merge_workloads,
+)
 
 ENVELOPE_DT_S = 1.0  # envelope sample spacing (matches bursty_arrivals bins)
 
@@ -113,6 +119,32 @@ class StreamSpec:
 
 
 @dataclass(frozen=True)
+class FaultSpec:
+    """Declarative, horizon-relative fault event (docs/faults.md).
+
+    Like :class:`EnvelopeSpec`, times are fractions of the horizon so a
+    fault scenario builds at any length (600s for tests, hour-long for the
+    matrix) without re-tuning. ``build(seed)`` realizes each FaultSpec into
+    a concrete :class:`~repro.traces.workload.FaultEvent` with absolute
+    times and a victim-selection seed derived deterministically from the
+    build seed and the fault's index — the same seeding discipline the
+    per-stream RandomStates follow.
+    """
+
+    kind: str  # one of workload.FAULT_KINDS
+    t_frac: float  # fire time as a fraction of the horizon
+    chips: int = 0  # chips lost (chip/host loss) or rejoining (recovery)
+    duration_frac: float = 0.0  # straggler window, fraction of horizon
+    slowdown: float = 1.0  # straggler perf multiplier (>1 = slower)
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; known: {FAULT_KINDS}"
+            )
+
+
+@dataclass(frozen=True)
 class ScenarioSpec:
     """A named, seeded, non-stationary tiered workload composition."""
 
@@ -120,6 +152,7 @@ class ScenarioSpec:
     horizon_s: float
     streams: Tuple[StreamSpec, ...]
     description: str = ""
+    faults: Tuple[FaultSpec, ...] = ()
 
     # ---- expected statistics (what scenario_checks verifies against) ----
     @property
@@ -178,7 +211,22 @@ class ScenarioSpec:
                     envelope=s.envelope.values(horizon),
                 )
             )
-        return merge_workloads(self.name, *parts)
+        wl = merge_workloads(self.name, *parts)
+        # faults ride along in horizon fractions; victim seeds derive from
+        # (build seed, fault index) so replays are bit-deterministic and a
+        # different build seed picks different victims
+        wl.faults = tuple(
+            FaultEvent(
+                t_s=f.t_frac * horizon,
+                kind=f.kind,
+                chips=f.chips,
+                duration_s=f.duration_frac * horizon,
+                slowdown=f.slowdown,
+                seed=(seed + 1) * 7919 + 101 * j,
+            )
+            for j, f in enumerate(self.faults)
+        )
+        return wl
 
     def scaled(self, rps_scale: float) -> "ScenarioSpec":
         """Spec with every stream's rate scaled (expected stats follow)."""
@@ -354,11 +402,130 @@ def _decode_heavy() -> ScenarioSpec:
     )
 
 
+# ---------------------------------------------------------------------------
+# Fault scenarios (the incident-matrix rows, benchmarks/fault_matrix.py).
+# The request load is deliberately steady — a flat two-tier base at the
+# 16-chip saturation point — so every goodput dip in the replay is
+# attributable to the injected fault, not to envelope shape. Fire times
+# sit mid-trace with a long post-fault window so time-to-recover and dip
+# width are measurable before the horizon ends.
+# ---------------------------------------------------------------------------
+_FAULT_HORIZON = 600.0
+
+
+def _fault_base_streams() -> Tuple[StreamSpec, ...]:
+    return (
+        StreamSpec(
+            "strict", _CONV["mean_rps"], _CONV["prompt_mean"],
+            _CONV["output_mean"], burstiness=0.5,
+        ),
+        StreamSpec(
+            "relaxed", _CODE["mean_rps"], _CODE["prompt_mean"],
+            _CODE["output_mean"], burstiness=0.5,
+        ),
+    )
+
+
+def _fault_chip_loss() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="fault_chip_loss",
+        horizon_s=_FAULT_HORIZON,
+        description=(
+            "Steady two-tier base; a single chip fails at 35% of the "
+            "horizon (killing its group and orphaning the group's "
+            "surviving chips) and rejoins at 65%, triggering a "
+            "weight-reload storm on re-formed groups."
+        ),
+        streams=_fault_base_streams(),
+        faults=(
+            FaultSpec("chip_loss", 0.35, chips=1),
+            FaultSpec("recovery", 0.65, chips=1),
+        ),
+    )
+
+
+def _fault_host_loss() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="fault_host_loss",
+        horizon_s=_FAULT_HORIZON,
+        description=(
+            "Steady two-tier base; a whole host (8 chips) drops at 35% of "
+            "the horizon — every group intersecting it dies and its "
+            "mid-decode sequences restart — and rejoins at 65%."
+        ),
+        streams=_fault_base_streams(),
+        faults=(
+            FaultSpec("host_loss", 0.35, chips=8),
+            FaultSpec("recovery", 0.65, chips=8),
+        ),
+    )
+
+
+def _fault_kv_loss() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="fault_kv_loss",
+        horizon_s=_FAULT_HORIZON,
+        description=(
+            "Steady two-tier base; one group dumps its HBM KV pool at 35% "
+            "and again (fresh victim draw) at 60% of the horizon. The "
+            "group and its chips survive; every resident sequence "
+            "restarts through the admission/spill path."
+        ),
+        streams=_fault_base_streams(),
+        faults=(
+            FaultSpec("kv_loss", 0.35),
+            FaultSpec("kv_loss", 0.60),
+        ),
+    )
+
+
+def _fault_straggler() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="fault_straggler",
+        horizon_s=_FAULT_HORIZON,
+        description=(
+            "Steady two-tier base; one group runs 3x slower for 25% of "
+            "the horizon starting at 35% (ECC storm / thermal throttle), "
+            "then recovers in place."
+        ),
+        streams=_fault_base_streams(),
+        faults=(
+            FaultSpec("straggler", 0.35, duration_frac=0.25, slowdown=3.0),
+        ),
+    )
+
+
+def _incident_replay() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="incident_replay",
+        horizon_s=_FAULT_HORIZON,
+        description=(
+            "Composed incident: a host (8 chips) drops at 30%, a second "
+            "correlated single-chip failure lands at 34% while the pool "
+            "is already degraded, and all 9 chips rejoin at once at 60% — "
+            "a recovery storm of simultaneous weight reloads."
+        ),
+        streams=_fault_base_streams(),
+        faults=(
+            FaultSpec("host_loss", 0.30, chips=8),
+            FaultSpec("chip_loss", 0.34, chips=1),
+            FaultSpec("recovery", 0.60, chips=9),
+        ),
+    )
+
+
+FAULT_SCENARIOS = (
+    "fault_chip_loss", "fault_host_loss", "fault_kv_loss", "fault_straggler",
+    "incident_replay",
+)
+
 _REGISTRY = {
     s.name: s
     for s in (
         _diurnal(), _flash_crowd(), _tier_drift(), _longctx_phases(),
         _prefill_heavy(), _decode_heavy(),
+        _fault_chip_loss(), _fault_host_loss(), _fault_kv_loss(),
+        _fault_straggler(), _incident_replay(),
     )
 }
 

@@ -9,9 +9,11 @@ sub-10s micro-bursts from synchronized user behavior.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
+
+FAULT_KINDS = ("chip_loss", "host_loss", "kv_loss", "straggler", "recovery")
 
 
 @dataclass(frozen=True)
@@ -23,11 +25,40 @@ class TraceRequest:
     output_len: int
 
 
+@dataclass(frozen=True)
+class FaultEvent:
+    """One seeded infrastructure disruption, anchored in absolute trace time.
+
+    Faults are part of the *workload*, not the simulator: a trace declares
+    what goes wrong and when, and any engine replaying the trace must apply
+    the same disruption. ``seed`` drives victim selection (which groups die
+    or straggle) so a (trace, seed) pair replays bit-identically.
+
+    Kinds (see docs/faults.md):
+      * ``chip_loss``  — ``chips`` chips fail; every group holding one dies.
+      * ``host_loss``  — same mechanics, host-sized (``chips`` ~ one host).
+      * ``kv_loss``    — one group's HBM KV pool is dumped; the group and
+                         its chips survive, resident sequences restart.
+      * ``straggler``  — one group runs ``slowdown``x slower for
+                         ``duration_s`` seconds, then recovers.
+      * ``recovery``   — ``chips`` chips rejoin the pool; newly formed
+                         groups pay a full weight-reload storm.
+    """
+
+    t_s: float
+    kind: str
+    chips: int = 0
+    duration_s: float = 0.0
+    slowdown: float = 1.0
+    seed: int = 0
+
+
 @dataclass
 class Workload:
     name: str
     requests: List[TraceRequest]
     horizon_s: float
+    faults: Tuple[FaultEvent, ...] = ()
 
     @property
     def rps(self) -> float:
@@ -51,7 +82,14 @@ class Workload:
             TraceRequest(r.req_id, r.tier, r.arrival_s * f, r.prompt_len, r.output_len)
             for r in self.requests
         ]
-        return Workload(f"{self.name}@{target_rps:.1f}rps", reqs, self.horizon_s * f)
+        faults = tuple(
+            FaultEvent(ev.t_s * f, ev.kind, ev.chips, ev.duration_s * f,
+                       ev.slowdown, ev.seed)
+            for ev in self.faults
+        )
+        return Workload(
+            f"{self.name}@{target_rps:.1f}rps", reqs, self.horizon_s * f, faults
+        )
 
 
 def bursty_arrivals(
@@ -165,4 +203,7 @@ def merge_workloads(name: str, *wls: Workload) -> Workload:
         TraceRequest(i, r.tier, r.arrival_s, r.prompt_len, r.output_len)
         for i, r in enumerate(reqs)
     ]
-    return Workload(name, reqs, max(w.horizon_s for w in wls))
+    faults = tuple(
+        sorted((ev for w in wls for ev in w.faults), key=lambda ev: ev.t_s)
+    )
+    return Workload(name, reqs, max(w.horizon_s for w in wls), faults)

@@ -3,10 +3,9 @@
 Covers the invariants the feature ships with (docs/simulator.md §KV
 occupancy):
   * conservation — tokens admitted − released == live occupancy at every
-    event (kv_audit asserts inside both engines);
+    event (kv_audit asserts inside the engine);
   * spill counters stay zero on the short-context seed traces;
-  * backpressure engages (per-tier spills > 0) on the long-context trace,
-    in both engines;
+  * backpressure engages (per-tier spills > 0) on the long-context trace;
   * occupancy-aware perf-model queries and the dynamic decode cap;
   * the satellite fixes: strictest-TPOT shared-group caps, dtype-correct
     slow-switch cost, incremental scheduler sync, KV-aware dispatch.
@@ -79,27 +78,24 @@ def test_max_decode_batch_hbm_free_override(perf):
 # ---------------------------------------------------------------------------
 # conservation: admitted - released == live occupancy at every event
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("engine", ["event", "fluid"])
 @pytest.mark.parametrize("system", ["nitsum", "sglang"])
-def test_kv_conservation_short_context(perf, tiers, engine, system):
+def test_kv_conservation_short_context(perf, tiers, system):
     wl = servegen_two_tier(horizon_s=30.0, seed=0)
-    sim, _ = run_system(system, perf, tiers, 16, wl, engine=engine, kv_audit=True)
+    sim, _ = run_system(system, perf, tiers, 16, wl, kv_audit=True)
     sim._kv_audit_check()  # final state must balance too
     assert len(sim.finished) > 0
 
 
-@pytest.mark.parametrize("engine", ["event", "fluid"])
-def test_kv_conservation_under_backpressure(perf, tiers_long, engine):
+def test_kv_conservation_under_backpressure(perf, tiers_long):
     wl = servegen_longctx(horizon_s=45.0, seed=0)
     sim, _ = run_system(
-        "sglang", perf, tiers_long, 16, wl, engine=engine, kv_audit=True
+        "sglang", perf, tiers_long, 16, wl, kv_audit=True
     )
     sim._kv_audit_check()
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("engine", ["event", "fluid"])
-def test_kv_conservation_across_reconfigurations(perf, tiers, engine):
+def test_kv_conservation_across_reconfigurations(perf, tiers):
     """Occupancy must survive group rebuilds: releases on dissolved groups,
     re-charges on migration targets (the shifting trace forces real TP
     reconfigurations, unlike the stationary two-tier mix)."""
@@ -107,7 +103,7 @@ def test_kv_conservation_across_reconfigurations(perf, tiers, engine):
 
     wl = servegen_shifting(horizon_s=120.0, seed=0, rps_scale=1.5)
     sim, _ = run_system(
-        "nitsum", perf, tiers, 16, wl, engine=engine, kv_audit=True
+        "nitsum", perf, tiers, 16, wl, kv_audit=True
     )
     assert sim.reconfig_count > 0  # the path under test actually ran
     sim._kv_audit_check()
@@ -116,21 +112,19 @@ def test_kv_conservation_across_reconfigurations(perf, tiers, engine):
 # ---------------------------------------------------------------------------
 # backpressure: silent on short contexts, engaged on long contexts
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("engine", ["event", "fluid"])
 @pytest.mark.parametrize("system", ["nitsum", "sglang"])
-def test_no_spills_on_short_context_seed_traces(perf, tiers, engine, system):
+def test_no_spills_on_short_context_seed_traces(perf, tiers, system):
     wl = servegen_two_tier(horizon_s=45.0, seed=0)
-    sim, _ = run_system(system, perf, tiers, 16, wl, engine=engine)
+    sim, _ = run_system(system, perf, tiers, 16, wl)
     res = sim.result(wl.horizon_s)
     assert isinstance(res, SimResult)
     assert res.spill_total == 0, res.spills
     assert all(v == 0 for v in res.spills.values())
 
 
-@pytest.mark.parametrize("engine", ["event", "fluid"])
-def test_backpressure_engages_on_long_context(perf, tiers_long, engine):
+def test_backpressure_engages_on_long_context(perf, tiers_long):
     wl = servegen_longctx(horizon_s=90.0, seed=0)
-    sim, _ = run_system("sglang", perf, tiers_long, 16, wl, engine=engine)
+    sim, _ = run_system("sglang", perf, tiers_long, 16, wl)
     res = sim.result(wl.horizon_s)
     # per-tier spill counts engage in BOTH tiers, and spilled requests are
     # re-routed or demoted, never dropped (a straggler may outlive the
@@ -143,8 +137,7 @@ def test_backpressure_engages_on_long_context(perf, tiers_long, engine):
     assert traj[-1] == res.spill_total
 
 
-@pytest.mark.parametrize("engine", ["event", "fluid"])
-def test_sliding_window_models_clamp_occupancy(engine):
+def test_sliding_window_models_clamp_occupancy():
     """Occupancy charges are window-clamped consistently with the capacity
     model (seq_kv_bytes): a sliding-window model's resident KV saturates at
     `window` tokens per sequence, so 16k prompts that the capacity model
@@ -154,7 +147,7 @@ def test_sliding_window_models_clamp_occupancy(engine):
     assert perf_swa.cfg.attn.window  # the premise of the test
     tl = derive_tiers(perf_swa, prompt_len=14000, ctx_len=15000)
     wl = servegen_longctx(horizon_s=45.0, seed=0)
-    sim, _ = run_system("sglang", perf_swa, tl, 16, wl, engine=engine,
+    sim, _ = run_system("sglang", perf_swa, tl, 16, wl,
                         kv_audit=True)
     assert sim.result(wl.horizon_s).spill_total == 0, sim.spill_counts
 

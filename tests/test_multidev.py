@@ -36,6 +36,16 @@ def test_kv_migration_preserves_contents():
     _run("migration")
 
 
+def test_fault_aborts_are_transactional():
+    """Mid-flight abort paths (docs/faults.md): interrupted switch rolls
+    back, dying migration leaves the source intact, reload on a shrunken
+    pool serves correct logits."""
+    out = _run("fault_abort")
+    assert "rolled back" in out
+    assert "source cache intact" in out
+    assert "shrunken pool" in out
+
+
 def test_engine_serves_with_tp_switches():
     out = _run("engine")
     assert "switch" in out

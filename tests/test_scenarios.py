@@ -18,7 +18,9 @@ from repro.testing.scenario_checks import (
     trace_statistics,
 )
 from repro.traces.scenarios import (
+    FAULT_SCENARIOS,
     EnvelopeSpec,
+    FaultSpec,
     ScenarioSpec,
     StreamSpec,
     get_scenario,
@@ -133,6 +135,47 @@ def test_scaled_spec_updates_expected_stats():
     assert spec.expected_tier_mix == pytest.approx(
         get_scenario("diurnal").expected_tier_mix
     )
+
+
+def test_registry_has_fault_scenarios():
+    # one scenario per fault family + the composed incident replay; the
+    # fault matrix (benchmarks/fault_matrix.py) depends on these names
+    for name in FAULT_SCENARIOS:
+        assert name in ALL, name
+    assert "incident_replay" in FAULT_SCENARIOS
+
+
+@pytest.mark.parametrize("name", FAULT_SCENARIOS)
+def test_fault_family_determinism(name):
+    """Per-family determinism: the same (spec, seed, horizon) realizes the
+    bit-identical fault schedule — times, victim seeds, magnitudes — and
+    check_determinism covers the co-generated arrival trace."""
+    spec = get_scenario(name)
+    check_determinism(spec, seed=4, horizon_s=120.0)
+    a = spec.build(seed=4, horizon_s=120.0)
+    b = spec.build(seed=4, horizon_s=120.0)
+    assert a.faults == b.faults and a.faults
+    # fault times land at the declared horizon fractions
+    for ev, fs in zip(a.faults, spec.faults):
+        assert ev.t_s == pytest.approx(fs.t_frac * 120.0)
+        assert ev.duration_s == pytest.approx(fs.duration_frac * 120.0)
+        assert ev.kind == fs.kind
+    # per-event seeds are distinct (independent victim draws)
+    assert len({ev.seed for ev in a.faults}) == len(a.faults)
+
+
+def test_fault_spec_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="kind"):
+        FaultSpec(kind="meteor_strike", t_frac=0.5)
+
+
+def test_fault_times_scale_with_horizon_not_load():
+    spec = get_scenario("fault_chip_loss")
+    short = spec.build(seed=0, horizon_s=100.0)
+    long = spec.build(seed=0, horizon_s=400.0)
+    for s, l in zip(short.faults, long.faults):
+        assert l.t_s == pytest.approx(4.0 * s.t_s)
+        assert l.kind == s.kind and l.chips == s.chips
 
 
 def test_custom_spec_composition():

@@ -1,109 +1,67 @@
-"""Event-engine vs fluid-reference equivalence (docs/simulator.md §Parity).
+"""Golden-trajectory regression gate (docs/simulator.md §Goldens).
 
-The event-driven engine must reproduce the fluid-tick reference's goodput
-within 2% relative tolerance per policy on seeded workloads — this is the
-acceptance gate for replacing the fluid loop as the default engine.
+The fluid reference engine is retired; the committed goldens in
+benchmarks/results/sim_golden.json (recorded via
+``python -m repro.testing.sim_equivalence --record``) pin the event
+engine's behaviour on seeded replays of every regime the old parity suite
+covered, plus the fault families. A red test here means a real
+behavioural change: fix the bug, or re-record the goldens on purpose.
 """
 import pytest
 
-from repro.configs import get_config
-from repro.profiles.perf_model import PerfModel
-from repro.profiles.slo import derive_tiers
-from repro.testing.sim_equivalence import check_equivalence, compare_engines
-from repro.traces.scenarios import get_scenario, list_scenarios
-from repro.traces.servegen import servegen_longctx, servegen_two_tier
+from repro.testing.sim_equivalence import (
+    CASES,
+    DEFAULT_RTOL,
+    GOLDEN_PATH,
+    check_case,
+    list_cases,
+    load_golden,
+    run_case,
+)
+
+FAST = list_cases(fast_only=True)
+SLOW = [n for n in list_cases() if n not in FAST]
 
 
 @pytest.fixture(scope="module")
-def perf():
-    return PerfModel(get_config("llama3-8b"))
-
-
-@pytest.fixture(scope="module")
-def tiers(perf):
-    return derive_tiers(perf, prompt_len=900, ctx_len=1000)
-
-
-def test_engines_equivalent_nitsum_sglang(perf, tiers):
-    wl = servegen_two_tier(horizon_s=60.0, seed=0)
-    results = check_equivalence(perf, tiers, 16, wl,
-                                systems=("nitsum", "sglang"), rtol=0.02)
-    for r in results:
-        assert r.finished_event > 0 and r.finished_fluid > 0
-        # both engines must complete the same request population
-        assert abs(r.finished_event - r.finished_fluid) <= max(
-            2, 0.02 * r.finished_fluid
-        ), r.summary()
-
-
-@pytest.mark.slow
-def test_engines_equivalent_all_baselines(perf, tiers):
-    wl = servegen_two_tier(horizon_s=60.0, seed=1)
-    check_equivalence(
-        perf, tiers, 16, wl,
-        systems=("sglang-pd", "sglang-slo", "split", "llumnix", "chiron",
-                 "oracle"),
-        rtol=0.02,
+def golden():
+    assert GOLDEN_PATH.exists(), (
+        f"golden file missing: {GOLDEN_PATH} — record it with "
+        "PYTHONPATH=src python -m repro.testing.sim_equivalence --record"
     )
+    return load_golden()
+
+
+def test_golden_file_covers_every_case(golden):
+    missing = [n for n in CASES if n not in golden["cases"]]
+    assert not missing, f"cases without a recorded golden: {missing}"
+
+
+def test_fast_lane_covers_fault_and_backpressure_regimes():
+    """The fast set must always gate at least one fault replay and the
+    long-context backpressure regime, whatever else gets added."""
+    assert any(n.startswith("fault_") for n in FAST)
+    assert any(n.startswith("longctx/") for n in FAST)
+    assert any(n.startswith("two_tier/") for n in FAST)
+
+
+@pytest.mark.parametrize("name", FAST)
+def test_matches_golden(name, golden):
+    bad = check_case(name, golden, rtol=DEFAULT_RTOL)
+    assert not bad, "\n".join(bad)
 
 
 @pytest.mark.slow
-def test_equivalence_across_load_levels(perf, tiers):
-    for scale in (0.5, 2.0):
-        wl = servegen_two_tier(horizon_s=45.0, seed=2, rps_scale=scale)
-        r = compare_engines("nitsum", perf, tiers, 16, wl)
-        assert r.within(0.02), (scale, r.summary())
+@pytest.mark.parametrize("name", SLOW)
+def test_matches_golden_slow(name, golden):
+    bad = check_case(name, golden, rtol=DEFAULT_RTOL)
+    assert not bad, "\n".join(bad)
 
 
-def test_equivalence_under_kv_backpressure(perf):
-    """Parity gates the dynamic KV-occupancy code path: on the long-context
-    trace the engines must agree on goodput within 2% WHILE admission
-    backpressure is engaging (spills > 0 in both engines)."""
-    tiers_long = derive_tiers(perf, prompt_len=14000, ctx_len=15000)
-    wl = servegen_longctx(horizon_s=90.0, seed=0)
-    results = {}
-    for system in ("sglang", "nitsum"):
-        r = results[system] = compare_engines(system, perf, tiers_long, 16, wl)
-        assert r.within(0.02), r.summary()
-        # both engines complete the same request population
-        assert abs(r.finished_event - r.finished_fluid) <= max(
-            2, 0.02 * r.finished_fluid
-        ), r.summary()
-    # backpressure engages for the static baseline, in BOTH engines
-    r_sgl = results["sglang"]
-    assert r_sgl.spill_total_event > 0 and r_sgl.spill_total_fluid > 0
-
-
-@pytest.mark.slow
-def test_equivalence_longctx_all_engines_full_horizon(perf):
-    tiers_long = derive_tiers(perf, prompt_len=14000, ctx_len=15000)
-    wl = servegen_longctx(horizon_s=240.0, seed=0)
-    for system in ("sglang", "nitsum"):
-        r = compare_engines(system, perf, tiers_long, 16, wl)
-        assert r.within(0.02), r.summary()
-
-
-def test_equivalence_on_nonstationary_scenario(perf, tiers):
-    """Scenario-matrix traces are non-stationary (envelopes, flash crowds),
-    a regime the original parity suite never exercised: the engines must
-    stay within the 2% budget on them too — part of the 'two consecutive
-    green PRs' condition for dropping the fluid engine (ROADMAP)."""
-    wl = get_scenario("flash_crowd").build(seed=0, horizon_s=60.0)
-    results = check_equivalence(perf, tiers, 16, wl,
-                                systems=("nitsum", "sglang"), rtol=0.02)
-    for r in results:
-        assert r.finished_event > 0 and r.finished_fluid > 0
-        assert abs(r.finished_event - r.finished_fluid) <= max(
-            2, 0.02 * r.finished_fluid
-        ), r.summary()
-
-
-@pytest.mark.slow
-def test_equivalence_across_all_scenarios(perf, tiers):
-    """Every registered scenario holds parity at a minutes-scale horizon
-    (the matrix replays them at hour scale under the event engine only,
-    so this is where their fluid ground truth is pinned)."""
-    for name in list_scenarios():
-        wl = get_scenario(name).build(seed=1, horizon_s=90.0)
-        r = compare_engines("nitsum", perf, tiers, 16, wl)
-        assert r.within(0.02), (name, r.summary())
+def test_replay_is_bit_deterministic():
+    """Stronger than the tolerance gate: the same case run twice in one
+    process must agree exactly — seeded traces, seeded fault schedules, no
+    wall-clock anywhere in the hot path. (The tolerance in check_case only
+    absorbs cross-change drift, never cross-run noise.)"""
+    name = "fault_host_loss/nitsum"
+    assert run_case(name) == run_case(name)
