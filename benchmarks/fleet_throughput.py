@@ -1,0 +1,286 @@
+"""Fleet-of-cells control plane (docs/control_plane.md): batch dispatch
+throughput over a multi-cell, sharded scheduler fabric at the 1M-user
+diurnal operating point, plus goodput parity of the fleet layer against
+the single-cell simulator on overlapping configs.
+
+Three legs:
+
+* ``control_plane`` — :class:`FleetScheduler` over >=4 cells (one
+  :class:`ShardedScheduler` per cell, 256-chip handle tables), replaying
+  the ``user_scaled_scenario`` million-user diurnal trace tick-by-tick
+  through ``dispatch_batch``. The ROADMAP target is >=100k req/s of
+  wall-clock dispatch; the scalar-loop baseline for the same fabric is
+  recorded next to it (``sched_throughput`` keeps the single-scheduler
+  pair).
+* ``parity`` — a 1-cell fleet must reproduce the plain ``run_system``
+  goodput on the same workload within 2% (it is event-order identical,
+  so the recorded gap is 0; the tolerance is the acceptance bound).
+* ``fleet_sim`` — an n-cell fleet simulation (cross-cell spill enabled)
+  on the diurnal scenario scaled to the fleet's chip count; records
+  goodput, intra-cell spills, and the ``cross_cell`` bucket.
+
+CI override (FLEET_CELLS / FLEET_CHIPS / FLEET_HORIZON / FLEET_USERS,
+mirroring the FAULT_MATRIX_* contract): resizes the full-mode legs; the
+result lands in ``fleet_throughput_env.json`` so the committed full-run
+evidence is never clobbered. Quick mode writes ``fleet_throughput_quick``.
+"""
+from __future__ import annotations
+
+import math
+import os
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks.common import CANDIDATE_TPS, Row, perf_model, save_json, tiers
+from repro.serving.fleet import FleetScheduler, run_fleet
+from repro.serving.global_scheduler import GroupHandle, ShardedScheduler
+from repro.serving.simulator import run_system
+from repro.traces.scenarios import get_scenario, user_scaled_scenario
+
+REFERENCE_CHIPS = 16  # the pool the base scenario rates saturate
+TICK_S = 0.02  # the simulator's arrival grid (Simulator.dt)
+RATE_COST = 0.001
+N_SHARDS = 4
+RECONCILE_S = 0.05
+
+# (n_cells, chips_per_cell, users, trace horizon_s, sim-leg horizon_s)
+FULL = dict(cells=4, chips=256, users=1_000_000, horizon=10.0, sim_horizon=300.0)
+QUICK = dict(cells=4, chips=64, users=100_000, horizon=4.0, sim_horizon=40.0)
+
+
+def _env_cfg() -> Optional[Dict]:
+    """CI override: FLEET_CELLS=4 FLEET_CHIPS=64 FLEET_HORIZON=6
+    FLEET_USERS=250000 resizes the full-mode legs (FAULT_MATRIX_*
+    contract: bad values raise ValueError so run.py records the
+    failure instead of silently skipping)."""
+    cells = os.environ.get("FLEET_CELLS")
+    if not cells:
+        return None
+    cfg = dict(FULL)
+    cfg["cells"] = int(cells)
+    if cfg["cells"] < 1:
+        raise ValueError(f"FLEET_CELLS must be >= 1, got {cells}")
+    chips = os.environ.get("FLEET_CHIPS")
+    if chips:
+        cfg["chips"] = int(chips)
+        if cfg["chips"] < 2 or cfg["chips"] % 2:
+            raise ValueError(
+                f"FLEET_CHIPS must be a positive even chip count per cell "
+                f"(TP-2 groups), got {chips}"
+            )
+    horizon = os.environ.get("FLEET_HORIZON")
+    if horizon:
+        cfg["horizon"] = float(horizon)
+        cfg["sim_horizon"] = max(10.0 * float(horizon), 40.0)
+        if cfg["horizon"] <= 0:
+            raise ValueError(f"FLEET_HORIZON must be > 0, got {horizon}")
+    users = os.environ.get("FLEET_USERS")
+    if users:
+        cfg["users"] = int(users)
+        if cfg["users"] < 1:
+            raise ValueError(f"FLEET_USERS must be >= 1, got {users}")
+    return cfg
+
+
+def _mk_cell(chips: int, n_shards: int, seed: int) -> ShardedScheduler:
+    """One cell's handle table: a TP-2 group per chip pair, tiers pinned
+    alternately (the launch/cells.py cell builders' shape), behind a
+    sharded scheduler with the periodic-reconciliation staleness bound."""
+    groups = [
+        GroupHandle(
+            g, "strict" if g % 2 else "relaxed", "mixed", 2, max_rps=50.0,
+            kv_stamp_s=0.0,
+        )
+        for g in range(chips // 2)
+    ]
+    return ShardedScheduler(
+        groups, n_shards=n_shards, shard_by="hash",
+        reconcile_interval_s=RECONCILE_S, kv_stale_s=RECONCILE_S, seed=seed,
+    )
+
+
+def control_plane_leg(cfg: Dict, n_shards: int = N_SHARDS, seed: int = 0) -> Dict:
+    spec = user_scaled_scenario("diurnal", users=cfg["users"])
+    wl = spec.build(seed=seed, horizon_s=cfg["horizon"])
+    reqs = sorted(wl.requests, key=lambda r: (r.arrival_s, r.req_id))
+    n = len(reqs)
+    req_tiers = [r.tier for r in reqs]
+    req_ids = np.array([r.req_id for r in reqs], dtype=np.int64)
+    arrivals = np.array([r.arrival_s for r in reqs])
+    # same admission grid as the simulator: arrivals quantize onto dt
+    # ticks and each tick's batch dispatches together
+    ticks = np.ceil(arrivals / TICK_S - 1e-9).astype(np.int64)
+
+    fs = FleetScheduler(
+        [_mk_cell(cfg["chips"], n_shards, seed + ci) for ci in range(cfg["cells"])],
+        seed=seed,
+    )
+    rcs = [RATE_COST] * n
+    bgs = [False] * n
+    completes: List = []
+    t0 = time.perf_counter()
+    i = 0
+    while i < n:
+        tk = ticks[i]
+        j = i
+        while j < n and ticks[j] == tk:
+            j += 1
+        picks = fs.dispatch_batch(
+            req_tiers[i:j], rcs[i:j], bgs[i:j], req_ids[i:j],
+            now=float(tk) * TICK_S,
+        )
+        # steady state: a slice of earlier dispatches completes each tick,
+        # releasing committed bandwidth on the cell that holds it
+        for ci, gid, rc in completes:
+            fs.cells[ci].complete(gid, rc)
+        cell_idx = fs.cell_of(req_ids[i:j])
+        completes = [
+            (int(cell_idx[k]), picks[k][0].gid, RATE_COST)
+            for k in range(0, j - i, 16)
+        ]
+        i = j
+    wall = time.perf_counter() - t0
+
+    # scalar baseline over the same fabric: one request at a time through
+    # each cell's scalar dispatch (the pre-refactor control-plane path)
+    fs2 = FleetScheduler(
+        [_mk_cell(cfg["chips"], n_shards, seed + ci) for ci in range(cfg["cells"])],
+        seed=seed,
+    )
+    m = min(n, 20_000)
+    cell_idx = fs2.cell_of(req_ids[:m])
+    t0 = time.perf_counter()
+    for k in range(m):
+        g, _ = fs2.cells[int(cell_idx[k])].dispatch(
+            req_tiers[k], RATE_COST, now=float(ticks[k]) * TICK_S,
+            key=int(req_ids[k]),
+        )
+        if k % 16 == 0:
+            fs2.cells[int(cell_idx[k])].complete(g.gid, RATE_COST)
+    wall_scalar = time.perf_counter() - t0
+
+    rps = n / wall
+    rps_scalar = m / wall_scalar
+    return {
+        "n_cells": cfg["cells"],
+        "chips_per_cell": cfg["chips"],
+        "groups_per_cell": cfg["chips"] // 2,
+        "n_shards": n_shards,
+        "reconcile_s": RECONCILE_S,
+        "users": cfg["users"],
+        "horizon_s": cfg["horizon"],
+        "requests": n,
+        "arrival_rps": n / cfg["horizon"],
+        "ticks": int(ticks[-1] - ticks[0]) + 1 if n else 0,
+        "dispatch_rps_fleet": rps,
+        "dispatch_rps_scalar": rps_scalar,
+        "batched_over_scalar": rps / max(rps_scalar, 1e-9),
+        "cross_cell_retries": fs.cross_cell,
+        "meets_100k": bool(rps >= 100_000),
+        "wall_s": wall,
+    }
+
+
+def parity_leg(perf, ts, horizon_s: float, seed: int = 0) -> Dict:
+    """Overlapping config: plain 16-chip run_system vs a 1-cell fleet on
+    the same trace. The fleet clock is event-order identical here, so
+    goodput must agree exactly (acceptance bound: 2%)."""
+    spec = get_scenario("diurnal")
+    wl = spec.build(seed=seed, horizon_s=horizon_s)
+    sim, _ = run_system("nitsum", perf, ts, REFERENCE_CHIPS, wl,
+                        candidate_tps=CANDIDATE_TPS)
+    single = sim.result(horizon_s)
+    fleet, _ = run_fleet("nitsum", perf, ts, 1, REFERENCE_CHIPS, wl,
+                         candidate_tps=CANDIDATE_TPS, seed=seed)
+    fr = fleet.result(horizon_s)
+    rel = abs(fr.goodput - single.goodput) / max(single.goodput, 1e-9)
+    if rel > 0.02:
+        raise AssertionError(
+            f"1-cell fleet diverged from single-cell goodput: "
+            f"{fr.goodput:.3f} vs {single.goodput:.3f} ({rel:.1%} > 2%)"
+        )
+    return {
+        "horizon_s": horizon_s,
+        "goodput_single": single.goodput,
+        "goodput_fleet1": fr.goodput,
+        "rel_gap": rel,
+        "finished_single": single.finished,
+        "finished_fleet1": fr.finished,
+    }
+
+
+def fleet_sim_leg(perf, ts, n_cells: int, chips_per_cell: int,
+                  horizon_s: float, seed: int = 0) -> Dict:
+    spec = get_scenario("diurnal")
+    rps_scale = n_cells * chips_per_cell / REFERENCE_CHIPS
+    wl = spec.build(seed=seed, horizon_s=horizon_s, rps_scale=rps_scale)
+    t0 = time.perf_counter()
+    fleet, _ = run_fleet(
+        "nitsum", perf, ts, n_cells, chips_per_cell, wl,
+        candidate_tps=CANDIDATE_TPS, seed=seed,
+    )
+    wall = time.perf_counter() - t0
+    res = fleet.result(horizon_s)
+    return {
+        "n_cells": n_cells,
+        "chips_per_cell": chips_per_cell,
+        "horizon_s": horizon_s,
+        "rps_scale": rps_scale,
+        "requests": len(wl.requests),
+        "goodput": res.goodput,
+        "per_tier_goodput": res.per_tier_goodput,
+        "spills": res.spills,
+        "cross_cell_spills": res.cross_cell_spills,
+        "finished": res.finished,
+        "reconfig_count": res.reconfig_count,
+        "switch_considered": res.switch_considered,
+        "wall_s": wall,
+    }
+
+
+def run(quick: bool = False) -> List[Row]:
+    env = _env_cfg()
+    cfg = env if env is not None else (QUICK if quick else FULL)
+    perf = perf_model()
+    ts = tiers(perf)
+
+    cp = control_plane_leg(cfg, n_shards=N_SHARDS if not quick else 2)
+    par = parity_leg(perf, ts, horizon_s=60.0 if quick else 120.0)
+    sim = fleet_sim_leg(
+        perf, ts, n_cells=2 if quick else cfg["cells"],
+        chips_per_cell=8 if quick else cfg["chips"],
+        horizon_s=cfg["sim_horizon"],
+    )
+
+    payload = {"control_plane": cp, "parity": par, "fleet_sim": sim}
+    if quick:
+        # quick runs never touch the committed full-run evidence
+        save_json("fleet_throughput_quick", payload)
+    else:
+        save_json("fleet_throughput" + ("_env" if env is not None else ""),
+                  payload)
+    return [
+        Row(
+            "fleet.dispatch_throughput",
+            cp["wall_s"] / max(cp["requests"], 1) * 1e6,
+            f"{cp['dispatch_rps_fleet']/1e3:.0f}K req/s over "
+            f"{cp['n_cells']}x{cp['chips_per_cell']}chips "
+            f"({cp['batched_over_scalar']:.0f}x scalar, "
+            f"arrivals {cp['arrival_rps']/1e3:.0f}K/s)",
+        ),
+        Row(
+            "fleet.goodput_parity_1cell",
+            par["rel_gap"] * 1e6,
+            f"fleet {par['goodput_fleet1']:.2f} vs single "
+            f"{par['goodput_single']:.2f} req/s ({par['rel_gap']:.2%} gap)",
+        ),
+        Row(
+            "fleet.sim_goodput",
+            sim["wall_s"] * 1e6,
+            f"{sim['n_cells']}x{sim['chips_per_cell']}chips "
+            f"goodput={sim['goodput']:.1f} spills={sum(sim['spills'].values())} "
+            f"cross_cell={sum(sim['cross_cell_spills'].values())}",
+        ),
+    ]

@@ -28,6 +28,7 @@ MODULES = [
     "fig15_scalability",
     "fig16_17_sensitivity",
     "sched_throughput",
+    "fleet_throughput",
     "sim_throughput",
     "kv_backpressure",
     "scenario_matrix",

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 
 @dataclass(frozen=True)
@@ -62,6 +62,21 @@ class GoodputMeter:
 
     def add(self, rec: RequestRecord) -> None:
         self.records.append(rec)
+
+    @classmethod
+    def merged(cls, meters: Sequence["GoodputMeter"]) -> "GoodputMeter":
+        """Combine per-cell meters into one fleet-level meter (tier tables
+        must agree on shared names). Records are re-sorted by arrival so
+        percentile/goodput queries behave as if one meter had observed the
+        whole fleet's traffic."""
+        tiers: Dict[str, SLOTier] = {}
+        records: List[RequestRecord] = []
+        for m in meters:
+            tiers.update(m.tiers)
+            records.extend(m.records)
+        out = cls(tiers)
+        out.records = sorted(records, key=lambda r: (r.arrival_s, r.req_id))
+        return out
 
     def meets_slo(self, rec: RequestRecord) -> bool:
         tier = self.tiers[rec.tier]

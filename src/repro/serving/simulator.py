@@ -51,7 +51,11 @@ from repro.core.incidents import analyze_incidents
 from repro.core.migration import MigrationModel
 from repro.core.planner import Planner, PlannerInputs, TierDemand
 from repro.profiles.perf_model import PerfModel
-from repro.serving.global_scheduler import GlobalScheduler, GroupHandle
+from repro.serving.global_scheduler import (
+    GlobalScheduler,
+    GroupHandle,
+    ShardedScheduler,
+)
 from repro.traces.workload import TraceRequest, Workload
 
 _EPS = 1e-9
@@ -938,7 +942,8 @@ class NitsumPolicy(Policy):
 
     def __init__(
         self, perf, tiers, dynamic_tp=True, fast_switch=True, slo_aware=True,
-        window_s=1.0, **kw,
+        window_s=1.0, n_shards=1, shard_by="hash", reconcile_s=0.0,
+        shard_seed=0, **kw,
     ):
         super().__init__(perf, tiers, **kw)
         self.dynamic_tp = dynamic_tp
@@ -947,7 +952,27 @@ class NitsumPolicy(Policy):
         self.planner = Planner(perf, tiers, candidate_tps=self.tps)
         self.mig = MigrationModel()
         self.name = "nitsum" + ("" if fast_switch else "-slowswitch")
+        # control-plane sharding (docs/control_plane.md): with n_shards > 1
+        # or a nonzero reconcile interval the dispatch view is a
+        # ShardedScheduler whose staleness is bounded by reconcile_s; the
+        # defaults keep the fully-synchronous per-arrival view (goldens)
+        self.n_shards = n_shards
+        self.shard_by = shard_by
+        self.reconcile_s = reconcile_s
+        self.shard_seed = shard_seed
         self.gs: Optional[GlobalScheduler] = None
+
+    def _mk_scheduler(self, handles) -> GlobalScheduler:
+        if self.n_shards > 1 or self.reconcile_s > 0.0:
+            # a KV snapshot that survived a full reconcile interval without
+            # being republished is treated as full (route conservatively)
+            stale = self.reconcile_s if self.reconcile_s > 0.0 else math.inf
+            return ShardedScheduler(
+                handles, n_shards=self.n_shards, shard_by=self.shard_by,
+                reconcile_interval_s=self.reconcile_s, kv_stale_s=stale,
+                seed=self.shard_seed,
+            )
+        return GlobalScheduler(handles)
 
     def _mk_plan(self, sim) -> List[GroupSpec]:
         demands = {}
@@ -1013,6 +1038,11 @@ class NitsumPolicy(Policy):
             self._cur_specs = new
             return new
         gain = self.estimate_specs(sim, new) > 1.15 * self.estimate_specs(sim, cur)
+        if gain:
+            # calibration counter (ROADMAP item 1): windows where a switch
+            # candidate cleared the gain threshold, whether or not the
+            # hysteresis streak let it through — no criterion change here
+            sim.switch_considered += 1
         self._gain_streak = getattr(self, "_gain_streak", 0) + 1 if gain else 0
         if self._gain_streak < 3:
             return None
@@ -1070,10 +1100,21 @@ class NitsumPolicy(Policy):
         ONLY when the group set itself changes (reconfiguration bumps
         `sim._groups_ver`); demand drift refreshes `max_rps` on the existing
         handles in place, and the per-arrival dynamic fields (queue_len, KV
-        headroom) are plain in-place writes."""
+        headroom) are plain in-place writes. With ``reconcile_s`` > 0 the
+        dynamic publish is gated to that cadence — dispatch then runs on a
+        stale-bounded snapshot (staleness <= reconcile_s), the handles
+        carry publish stamps, and KV headroom older than the interval is
+        treated as full by the scheduler (kv_stale_s)."""
         gs = self.gs
+        rebuild = gs is None or getattr(self, "_sync_ver", None) != sim._groups_ver
+        if (
+            not rebuild
+            and self.reconcile_s > 0.0
+            and sim.now - getattr(self, "_last_pub", -math.inf) < self.reconcile_s
+        ):
+            return
         sig = self._sync_demand_sig(sim)
-        if gs is None or getattr(self, "_sync_ver", None) != sim._groups_ver:
+        if rebuild:
             handles = [
                 GroupHandle(
                     g.gid, g.spec.tier, g.spec.stage, g.spec.tp,
@@ -1082,7 +1123,7 @@ class NitsumPolicy(Policy):
                 for g in sim.groups
             ]
             if gs is None:
-                self.gs = gs = GlobalScheduler(handles)
+                self.gs = gs = self._mk_scheduler(handles)
             else:
                 gs.replace_groups(handles)
             self._sync_ver = sim._groups_ver
@@ -1093,10 +1134,14 @@ class NitsumPolicy(Policy):
                 gsg[g.gid].max_rps = self._handle_max_rps(sim, g)
             self._sync_sig = sig
         gsg = gs.groups
+        now, ver = sim.now, sim._groups_ver
         for g in sim.groups:
             h = gsg[g.gid]
             h.queue_len = g.queue_len
             h.kv_free_frac = sim.kv_free_frac(g)
+            h.kv_stamp_s = now
+            h.kv_ver = ver
+        self._last_pub = now
 
     def on_fault(self, sim, event):
         """Forced replan: re-solve the plan over the changed chip pool,
@@ -1117,7 +1162,10 @@ class NitsumPolicy(Policy):
         self._sync_scheduler(sim)
         rate_cost = 1.0
         for _ in range(2):
-            h, feasible = self.gs.dispatch(req.tr.tier, rate_cost, req.background)
+            h, feasible = self.gs.dispatch(
+                req.tr.tier, rate_cost, req.background,
+                now=sim.now, key=req.tr.req_id,
+            )
             g = sim._by_gid.get(h.gid)
             if g is not None:
                 req.feasible = feasible
@@ -1135,6 +1183,37 @@ class NitsumPolicy(Policy):
         req.rate_cost = 0.0
         req.dispatch_gid = None
         return super().route(sim, req)
+
+    def route_batch(self, sim, reqs: List[SimReq]) -> List[Group]:
+        """Batch-vectorized routing (docs/control_plane.md): one scheduler
+        sync for the whole arrival batch, then array-scored dispatch over
+        the published handle snapshot. Decision semantics match per-request
+        ``route``; queue growth inside the batch is tracked on the snapshot
+        (the per-arrival sync would have shown each append)."""
+        if not self.slo_aware:
+            return [super(NitsumPolicy, self).route(sim, r) for r in reqs]
+        self._sync_scheduler(sim)
+        rate_cost = 1.0
+        items = [(r.tr.tier, rate_cost, r.background) for r in reqs]
+        keys = [r.tr.req_id for r in reqs]
+        picks = self.gs.dispatch_batch(items, now=sim.now, keys=keys)
+        out: List[Group] = []
+        for r, (h, feasible) in zip(reqs, picks):
+            g = sim._by_gid.get(h.gid)
+            if g is None:
+                # stale handle (teardown race): release the commitment the
+                # failed dispatch took and fall back to the scalar path,
+                # which retries against live handles
+                if feasible and not r.background:
+                    self.gs.complete(h.gid, rate_cost)
+                self.gs.mark_dead(h.gid)
+                out.append(self.route(sim, r))
+                continue
+            r.feasible = feasible
+            r.rate_cost = rate_cost
+            r.dispatch_gid = h.gid
+            out.append(g)
+        return out
 
 
 class OraclePolicy(Policy):
@@ -1201,6 +1280,10 @@ class SimResult:
     # (t, cumulative reconfigurations) per second — the scenario matrix
     # plots reconfiguration activity against the workload's phase structure
     reconfig_timeline: List[Tuple[float, int]] = field(default_factory=list)
+    # windows where a switch candidate cleared the policy's gain threshold
+    # (applied or not): reconfig_count/switch_considered is the hysteresis
+    # acceptance rate the tier_drift calibration question needs
+    switch_considered: int = 0
     # ---- fault/recovery accounting (docs/faults.md) ----
     # one entry per applied FaultEvent: kind, fire time, victims, chips
     # lost/restored, sequences restarted
@@ -1293,6 +1376,14 @@ class Simulator:
         self._win_good = 0
         self.last_planning_ms = 0.0
         self.reconfig_count = 0
+        self.switch_considered = 0
+        # fleet composition (serving/fleet.py): set by FleetSimulator when
+        # this cell joins a fleet — enables cross-cell spill ahead of the
+        # intra-cell demote, and external (fleet-clock) arrival admission
+        self._fleet = None
+        # arrival batches below this size route through the scalar path
+        # (snapshot construction would cost more than it saves)
+        self.batch_route_min = 4
         self._tier_defaults: Dict[Optional[str], TierDemand] = {}
         # fault machinery (docs/faults.md)
         self.fault_log: List[dict] = []
@@ -1321,6 +1412,7 @@ class Simulator:
             spills=dict(self.spill_counts),
             finished=len(self.finished),
             reconfig_count=self.reconfig_count,
+            switch_considered=self.switch_considered,
             timeline=list(self.timeline),
             spill_timeline=list(self.spill_timeline),
             reconfig_timeline=list(self.reconfig_timeline),
@@ -1501,17 +1593,22 @@ class Simulator:
             tw[req.tr.tier] = tw.get(req.tr.tier, 0) + 1
 
     # ---- shared run setup ------------------------------------------------
-    def _setup(self, workload: Workload) -> List[TraceRequest]:
+    def _setup(
+        self, workload: Workload, demand_scale: float = 1.0
+    ) -> List[TraceRequest]:
+        """``demand_scale`` < 1 sizes the initial plan for a fraction of the
+        workload's rate — a fleet cell plans for its share of the admitted
+        stream, not the whole front-door trace."""
         for t in self.tiers.values():
             sub = [r for r in workload.requests if r.tier == t.name]
             if sub:
                 self._tier_defaults[t.name] = TierDemand(
-                    rps=len(sub) / workload.horizon_s,
+                    rps=len(sub) / workload.horizon_s * demand_scale,
                     prompt_len=int(np.mean([r.prompt_len for r in sub])),
                     output_len=int(np.mean([r.output_len for r in sub])),
                 )
         self._tier_defaults[None] = TierDemand(
-            rps=workload.rps,
+            rps=workload.rps * demand_scale,
             prompt_len=int(np.mean([r.prompt_len for r in workload.requests])),
             output_len=int(np.mean([r.output_len for r in workload.requests])),
         )
@@ -1527,13 +1624,17 @@ class Simulator:
             return 0.0
         return max(budget - g.kv_projected_bytes(), 0.0) / budget
 
-    def _kv_backpressure(self, req: SimReq, g: Group) -> Group:
+    def _kv_backpressure(
+        self, req: SimReq, g: Group, fleet_ok: bool = True
+    ) -> Optional[Group]:
         """Admission control at arrival: if the routed group's projected
         occupancy (live KV + queued prompts + this prompt) crosses the
         watermark, the prefill spills — re-routed to the compatible group
-        with the most projected headroom, or, when every group is at the
-        watermark, demoted to best-effort so it sinks in the priority
-        queue. Either way the per-tier spill counter increments."""
+        with the most projected headroom; failing that, offered to the
+        fleet as a cross-cell spill (returns None when another cell takes
+        it); only when no cell anywhere has headroom is it demoted to
+        best-effort so it sinks in the priority queue. Either way the
+        per-tier spill counter increments."""
         perf = self.perf
         if perf.kv_bytes_per_token() <= 0 and perf.state_bytes() <= 0:
             return g  # O(1)-state model: no KV pressure to model
@@ -1570,6 +1671,12 @@ class Simulator:
                     h.committed_rps += req.rate_cost
                 req.dispatch_gid = best.gid
             return best
+        # cross-cell spill (docs/control_plane.md): before demoting, offer
+        # the request to the fleet — first-choice overflow path when this
+        # cell is at the watermark but a sibling cell has headroom
+        if fleet_ok and self._fleet is not None:
+            if self._fleet._take_spill(self, req):
+                return None
         req.feasible = False  # no headroom anywhere: best-effort spill
         return g
 
@@ -1577,7 +1684,12 @@ class Simulator:
         self._recent_push(tr)
         req = SimReq(tr, background=tr.tier in self._bg_tiers)
         g = self.policy.route(self, req)
+        self._place(req, g)
+
+    def _place(self, req: SimReq, g: Group) -> None:
         g = self._kv_backpressure(req, g)
+        if g is None:
+            return  # cross-cell spill: another cell admitted the request
         if g._ev_kind not in ("prefill", "unblock"):
             # an armed prefill/unblock event is unaffected by a queue append;
             # otherwise (idle, or decoding that prefill now preempts) re-arm
@@ -1588,6 +1700,32 @@ class Simulator:
             return
         g.prefill_q.append(req)
         req.group = g
+
+    def _admit_batch(self, batch: Sequence[TraceRequest]) -> None:
+        """Admit one same-tick arrival batch. Batches at or above
+        ``batch_route_min`` go through the policy's vectorized
+        ``route_batch`` (one scheduler sync + array-scored dispatch);
+        smaller ones take the scalar path where the snapshot would cost
+        more than it saves."""
+        route_batch = getattr(self.policy, "route_batch", None)
+        if route_batch is None or len(batch) < self.batch_route_min:
+            for tr in batch:
+                self._admit(tr)
+            return
+        reqs = []
+        for tr in batch:
+            self._recent_push(tr)
+            reqs.append(SimReq(tr, background=tr.tier in self._bg_tiers))
+        for req, g in zip(reqs, route_batch(self, reqs)):
+            self._place(req, g)
+
+    def _admit_transfer(self, req: SimReq) -> None:
+        """Admit a request handed off by the fleet (cross-cell spill):
+        route inside this cell and place it. Re-spilling back out is
+        suppressed by the fleet's in-progress guard."""
+        self._recent_push(req.tr)
+        g = self.policy.route(self, req)
+        self._place(req, g)
 
     # ---- fault injection (docs/faults.md) --------------------------------
     def _pick_victims(self, seed: int, chips: int) -> List[Group]:
@@ -1629,7 +1767,10 @@ class Simulator:
             r.feasible = True
         self.fault_restarts[r.tr.tier] = self.fault_restarts.get(r.tr.tier, 0) + 1
         g = self.policy.route(self, r)
-        g = self._kv_backpressure(r, g)
+        # fleet_ok=False: restart storms stay intra-cell — the restarted
+        # sequence's SLO clock is already running and a cross-cell hand-off
+        # mid-incident would hide the victim cell's recovery cost
+        g = self._kv_backpressure(r, g, fleet_ok=False)
         g.prefill_q.append(r)
         r.group = g
 
@@ -1825,10 +1966,22 @@ class Simulator:
         for g in self.groups:
             self._schedule_group(g)
 
-    def _run_event(self, workload: Workload, drain_s: float) -> GoodputMeter:
-        arr = self._setup(workload)
-        horizon = workload.horizon_s + drain_s
-        i, n = 0, len(arr)
+    def _begin(
+        self,
+        workload: Workload,
+        drain_s: float,
+        external_arrivals: bool = False,
+        demand_scale: float = 1.0,
+    ) -> None:
+        """Stand the engine up for stepped execution: plan the initial
+        layout, stage the arrival stream (unless a fleet feeds arrivals in
+        externally), and arm the heaps. After this, ``_next_time`` /
+        ``_process`` advance the simulation one event-time at a time — the
+        fleet layer drives many cells under one clock this way."""
+        arr = self._setup(workload, demand_scale)
+        self._horizon = workload.horizon_s + drain_s
+        if external_arrivals:
+            arr = []
         if self.grid_parity:
             # golden-trajectory stability: admit arrivals at dt-grid starts
             # (the retired fluid reference's tick grid, which the recorded
@@ -1837,53 +1990,69 @@ class Simulator:
             adm = [math.ceil(r.arrival_s / dt - 1e-9) * dt for r in arr]
         else:
             adm = [r.arrival_s for r in arr]
-        next_window = self.window_s
-        next_second = 1.0
+        self._arr = arr
+        self._adm = adm
+        self._arr_i = 0
+        self._next_window = self.window_s
+        self._next_second = 1.0
         self._heap = []
         self._fault_heap = []
         for ev in workload.faults:
             heapq.heappush(self._fault_heap, (ev.t_s, next(self._seq), ev))
         for g in self.groups:
             self._schedule_group(g)
-        INF = math.inf
-        peek = self._peek_group_event
-        handle = self._handle_group_event
-        admit = self._admit
+
+    def _next_time(self) -> float:
+        """Earliest pending event: next arrival, group boundary event,
+        fault, window boundary, or per-second sampling point."""
+        t = self._peek_group_event()
+        if self._arr_i < len(self._adm):
+            t = min(t, self._adm[self._arr_i])
+        if self._fault_heap:
+            t = min(t, self._fault_heap[0][0])
+        return min(t, self._next_window, self._next_second)
+
+    def _process(self, t: float) -> None:
+        """Process every pending event at/under ``t``, in the engine's
+        canonical order: arrivals, faults, group boundary events, then the
+        second/window boundaries when ``t`` reaches them."""
+        self.now = t
+        adm, i, n = self._adm, self._arr_i, len(self._adm)
+        if i < n and adm[i] <= t:
+            j = i
+            while j < n and adm[j] <= t:
+                j += 1
+            self._arr_i = j
+            self._admit_batch(self._arr[i:j])
         faults = self._fault_heap
+        while faults and faults[0][0] <= t:
+            _, _, action = heapq.heappop(faults)
+            self._apply_fault_action(action)
+        while self._peek_group_event() <= t:
+            self._handle_group_event()
+        if t >= self._next_second:
+            self._recent_expire()  # static policies never query stats
+            self.timeline.append((t, self._win_good / 1.0))
+            self.spill_timeline.append((t, sum(self.spill_counts.values())))
+            self.reconfig_timeline.append((t, self.reconfig_count))
+            self._win_good = 0
+            tw = self._tier_win_good
+            for tier, tl in self.tier_timelines.items():
+                tl.append((t, float(tw.get(tier, 0))))
+                tw[tier] = 0
+            self._next_second += 1.0
+        if t >= self._next_window:
+            self._window_boundary()
+            self._next_window += self.window_s
+
+    def _run_event(self, workload: Workload, drain_s: float) -> GoodputMeter:
+        self._begin(workload, drain_s)
+        horizon = self._horizon
         while True:
-            t_grp = peek()
-            t_arr = adm[i] if i < n else INF
-            t_flt = faults[0][0] if faults else INF
-            t = min(t_arr, t_grp, next_window, next_second, t_flt)
+            t = self._next_time()
             if t >= horizon:
                 break
-            self.now = t
-            if t_arr <= t:
-                while i < n and adm[i] <= t:
-                    admit(arr[i])
-                    i += 1
-                t_grp = peek()
-            while faults and faults[0][0] <= t:
-                _, _, action = heapq.heappop(faults)
-                self._apply_fault_action(action)
-                t_grp = peek()
-            while t_grp <= t:
-                handle()
-                t_grp = peek()
-            if t >= next_second:
-                self._recent_expire()  # static policies never query stats
-                self.timeline.append((t, self._win_good / 1.0))
-                self.spill_timeline.append((t, sum(self.spill_counts.values())))
-                self.reconfig_timeline.append((t, self.reconfig_count))
-                self._win_good = 0
-                tw = self._tier_win_good
-                for tier, tl in self.tier_timelines.items():
-                    tl.append((t, float(tw.get(tier, 0))))
-                    tw[tier] = 0
-                next_second += 1.0
-            if t >= next_window:
-                self._window_boundary()
-                next_window += self.window_s
+            self._process(t)
         self.now = horizon
         return self.meter
 
@@ -1891,18 +2060,16 @@ class Simulator:
         return self.meter.goodput(workload.horizon_s)
 
 
-def run_system(
+def make_policy(
     system: str,
     perf: PerfModel,
     tiers: Sequence[SLOTier],
     n_chips: int,
-    workload: Workload,
     candidate_tps=(1, 2, 4, 8),
-    engine: str = "event",
-    kv_watermark: float = 0.9,
-    kv_audit: bool = False,
     **policy_kw,
-):
+) -> Policy:
+    """Build the named policy sized for an ``n_chips`` pool (the fleet
+    layer calls this once per cell with the per-cell chip count)."""
     tps = [t for t in candidate_tps if t <= n_chips]
     # static baselines run at the minimal TP the model fits (paper's setup)
     tp0 = perf.min_tp(tps)
@@ -1924,9 +2091,27 @@ def run_system(
     if system.startswith("static-tp"):
         tp = int(system.split("static-tp")[1].split("-")[0])
         disagg = system.endswith("-pd")
-        policy = StaticPolicy(perf, tiers, tp=tp, disaggregated=disagg, candidate_tps=tps)
-    else:
-        policy = mk[system]()
+        return StaticPolicy(
+            perf, tiers, tp=tp, disaggregated=disagg, candidate_tps=tps
+        )
+    return mk[system]()
+
+
+def run_system(
+    system: str,
+    perf: PerfModel,
+    tiers: Sequence[SLOTier],
+    n_chips: int,
+    workload: Workload,
+    candidate_tps=(1, 2, 4, 8),
+    engine: str = "event",
+    kv_watermark: float = 0.9,
+    kv_audit: bool = False,
+    **policy_kw,
+):
+    policy = make_policy(
+        system, perf, tiers, n_chips, candidate_tps=candidate_tps, **policy_kw
+    )
     sim = Simulator(
         perf, tiers, n_chips, policy, engine=engine,
         kv_watermark=kv_watermark, kv_audit=kv_audit,

@@ -541,3 +541,25 @@ def get_scenario(name: str) -> ScenarioSpec:
         raise KeyError(
             f"unknown scenario {name!r}; known: {sorted(_REGISTRY)}"
         ) from None
+
+
+# Fleet-scale population model (benchmarks/fleet_throughput.py): per-user
+# request rate at peak engagement. ServeGen's population traces put an
+# active chat/code user at roughly one request every ~8 s while engaged;
+# 1M users at this rate is a ~120k req/s front door — the ROADMAP's
+# "millions of users" operating point for the fleet control plane.
+RPS_PER_USER = 0.12
+
+
+def user_scaled_scenario(
+    name: str = "diurnal", users: int = 1_000_000,
+    rps_per_user: float = RPS_PER_USER,
+) -> ScenarioSpec:
+    """The named scenario scaled so its expected aggregate rate models a
+    ``users``-sized population: every stream's rate envelope is multiplied
+    by ``users * rps_per_user / expected_rps``. The composition (tier mix,
+    length distributions, envelope phases, burstiness) is untouched — only
+    the population behind it grows."""
+    spec = get_scenario(name)
+    scale = users * rps_per_user / max(spec.expected_rps, 1e-9)
+    return replace(spec.scaled(scale), name=f"{name}_{users}u")

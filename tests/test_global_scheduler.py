@@ -102,3 +102,190 @@ def test_dispatch_prefers_least_relative_load():
     gids = [gs.dispatch("strict", 1.0)[0].gid for _ in range(4)]
     # alternates between the two equally-sized groups
     assert sorted(gids[:2]) == [0, 1] and sorted(gids[2:]) == [0, 1]
+
+
+# ---- batch-vectorized dispatch (docs/control_plane.md) --------------------
+
+def _mk_big(seed=7, n=48):
+    import numpy as np
+
+    rng = np.random.RandomState(seed)
+    out = []
+    for g in range(n):
+        tier = [None, "strict", "relaxed", "bg"][g % 4]
+        out.append(GroupHandle(
+            g, tier, "mixed", 2,
+            max_rps=float(rng.uniform(0.5, 8.0)),
+            queue_len=int(rng.randint(0, 5)),
+            kv_free_frac=float(rng.choice([0.0, 0.3, 0.9])),
+        ))
+    return out
+
+
+def _rand_items(seed=11, n=2000):
+    import numpy as np
+
+    rng = np.random.RandomState(seed)
+    items = []
+    for _ in range(n):
+        items.append((
+            ["strict", "relaxed"][int(rng.randint(2))],
+            float(rng.choice([0.2, 0.5, 1.0])),
+            bool(rng.rand() < 0.1),
+        ))
+    return items
+
+
+def test_dispatch_batch_matches_scalar_sequence():
+    """The batch path's correctness claim: identical decisions to calling
+    dispatch() per item — same groups, same feasibility, same RR spill
+    order, same end-state commitments."""
+    items = _rand_items()
+    a = GlobalScheduler(_mk_big())
+    b = GlobalScheduler(_mk_big())
+    seq = [a.dispatch(t, rc, background=bg) for (t, rc, bg) in items]
+    bat = []
+    for i in range(0, len(items), 256):
+        bat.extend(b.dispatch_batch(items[i : i + 256]))
+    for i, ((ga, fa), (gb, fb)) in enumerate(zip(seq, bat)):
+        assert (ga.gid, fa) == (gb.gid, fb), (i, items[i])
+    for gid in a.groups:
+        assert a.groups[gid].committed_rps == pytest.approx(
+            b.groups[gid].committed_rps
+        )
+
+
+def test_dispatch_batch_respects_kv_staleness():
+    """Batch and scalar paths apply the same staleness bound."""
+    def mk():
+        return [
+            GroupHandle(0, "strict", "prefill", 2, max_rps=10.0,
+                        kv_free_frac=0.9, kv_stamp_s=0.0),
+            GroupHandle(1, "strict", "prefill", 2, max_rps=10.0,
+                        committed_rps=5.0, kv_free_frac=0.9, kv_stamp_s=0.2),
+        ]
+
+    a = GlobalScheduler(mk(), kv_stale_s=0.05)
+    b = GlobalScheduler(mk(), kv_stale_s=0.05)
+    items = [("strict", 0.1, False)] * 4
+    seq = [a.dispatch(t, rc, background=bg, now=0.21) for t, rc, bg in items]
+    bat = b.dispatch_batch(items, now=0.21)
+    assert [g.gid for g, _ in seq] == [g.gid for g, _ in bat]
+
+
+# ---- KV snapshot staleness bound (regression) -----------------------------
+
+def test_kv_staleness_bound_not_fooled_by_filled_group():
+    """Regression: a group can fill completely between two scheduler
+    syncs. Group 0's snapshot (taken at t=0) still claims 90% KV free,
+    but the group has since filled; group 1 republished at t=0.2. With
+    the staleness bound, dispatch at t=0.21 must treat group 0's claim
+    as expired and route to the fresh (higher-loaded) group instead of
+    the phantom headroom."""
+    stale = GroupHandle(0, "strict", "prefill", 2, max_rps=10.0,
+                        kv_free_frac=0.9, kv_stamp_s=0.0)
+    fresh = GroupHandle(1, "strict", "prefill", 2, max_rps=10.0,
+                        committed_rps=5.0, kv_free_frac=0.9, kv_stamp_s=0.2)
+    gs = GlobalScheduler([stale, fresh], kv_stale_s=0.05)
+    g, feas = gs.dispatch("strict", 0.1, now=0.21)
+    assert feas and g.gid == 1
+
+    # without the bound (the fully-synchronous default) the same state
+    # routes into the stale snapshot's phantom headroom
+    stale2 = GroupHandle(0, "strict", "prefill", 2, max_rps=10.0,
+                         kv_free_frac=0.9, kv_stamp_s=0.0)
+    fresh2 = GroupHandle(1, "strict", "prefill", 2, max_rps=10.0,
+                         committed_rps=5.0, kv_free_frac=0.9, kv_stamp_s=0.2)
+    gs2 = GlobalScheduler([stale2, fresh2])
+    g2, _ = gs2.dispatch("strict", 0.1, now=0.21)
+    assert g2.gid == 0
+
+
+def test_kv_staleness_all_stale_falls_back_to_bandwidth():
+    """When every snapshot is expired the KV filter drops out entirely
+    (feasible set unchanged) instead of rejecting all groups."""
+    gs = GlobalScheduler(
+        [GroupHandle(0, "strict", "prefill", 2, max_rps=10.0,
+                     kv_free_frac=0.9, kv_stamp_s=0.0)],
+        kv_stale_s=0.05,
+    )
+    g, feas = gs.dispatch("strict", 1.0, now=10.0)
+    assert feas and g.gid == 0
+
+
+# ---- sharded scheduler ----------------------------------------------------
+
+def test_sharded_scheduler_validation():
+    from repro.serving.global_scheduler import ShardedScheduler
+
+    with pytest.raises(ValueError):
+        ShardedScheduler(mk_groups(), n_shards=0)
+    with pytest.raises(ValueError):
+        ShardedScheduler(mk_groups(), shard_by="tenant")
+
+
+def test_sharded_one_shard_matches_unsharded():
+    from repro.serving.global_scheduler import ShardedScheduler
+
+    items = _rand_items(seed=3, n=500)
+    a = GlobalScheduler(_mk_big())
+    s = ShardedScheduler(_mk_big(), n_shards=1)
+    for i, (t, rc, bg) in enumerate(items):
+        ga, fa = a.dispatch(t, rc, background=bg, key=i)
+        gb, fb = s.dispatch(t, rc, background=bg, key=i)
+        assert (ga.gid, fa) == (gb.gid, fb), i
+    for gid in a.groups:
+        assert a.groups[gid].committed_rps == pytest.approx(
+            s.groups[gid].committed_rps
+        )
+
+
+def test_sharded_deterministic_across_runs():
+    from repro.serving.global_scheduler import ShardedScheduler
+
+    items = _rand_items(seed=5, n=600)
+
+    def run(seed):
+        s = ShardedScheduler(_mk_big(), n_shards=4, seed=seed,
+                             reconcile_interval_s=0.5)
+        out = []
+        for i, (t, rc, bg) in enumerate(items):
+            g, f = s.dispatch(t, rc, background=bg, now=i * 0.01, key=i)
+            out.append((g.gid, f))
+        return out
+
+    assert run(seed=9) == run(seed=9)
+
+
+def test_sharded_reconcile_bounds_staleness():
+    """Commitments written through to the authoritative table become
+    visible to every shard at the next reconcile — a shard's view is
+    never staler than one interval."""
+    from repro.serving.global_scheduler import ShardedScheduler
+
+    s = ShardedScheduler(_mk_big(), n_shards=4, seed=1,
+                         reconcile_interval_s=0.5)
+    for i in range(40):
+        s.dispatch("strict", 0.5, now=0.0, key=i)
+    # before the interval elapses some shard views lag the authoritative
+    lag = sum(
+        1 for sh in s._shards for gid, h in sh.groups.items()
+        if h.committed_rps != s.groups[gid].committed_rps
+    )
+    assert lag > 0
+    s.dispatch("strict", 0.5, now=0.6, key=999)  # crosses the interval
+    for sh in s._shards:
+        for gid, h in sh.groups.items():
+            # exact as of the reconcile; only the post-reconcile dispatch
+            # (key=999) can have moved the authoritative view since
+            assert abs(h.committed_rps - s.groups[gid].committed_rps) <= 0.5
+
+
+def test_sharded_mark_dead_propagates_immediately():
+    from repro.serving.global_scheduler import ShardedScheduler
+
+    s = ShardedScheduler(mk_groups(), n_shards=2, reconcile_interval_s=100.0)
+    s.mark_dead(0)
+    for _ in range(20):
+        g, _ = s.dispatch("strict", 0.1, key=_)
+        assert g.gid != 0
