@@ -56,9 +56,17 @@ FULL_MATRIX: Dict[int, Tuple[float, Tuple[str, ...]]] = {
     512: (600.0, ("diurnal", "tier_drift", "prefill_heavy", "decode_heavy")),
 }
 QUICK_MATRIX: Dict[int, Tuple[float, Tuple[str, ...]]] = {
-    64: (90.0, ("diurnal", "flash_crowd", "tier_drift", "longctx_phases")),
+    # the length-heavy regimes ride the quick matrix so the CI gate
+    # (repro.testing.length_regime_gate) can watch them on every run
+    64: (90.0, ("diurnal", "flash_crowd", "tier_drift", "longctx_phases",
+                "prefill_heavy", "decode_heavy")),
     128: (90.0, ("diurnal", "flash_crowd", "tier_drift", "longctx_phases")),
 }
+
+# scenarios where nitsum vs static is a capacity contest at one length
+# regime (the two cells the PR-3 matrix showed losing); everything else in
+# the matrix is a MIX scenario nitsum is expected to win outright
+LENGTH_REGIMES = ("prefill_heavy", "decode_heavy")
 
 TRAJECTORY_POINTS = 600  # downsample per-second series to at most this
 
@@ -165,6 +173,11 @@ def run_cell(
         "spills": res.spills,
         "spill_total": res.spill_total,
         "reconfig_count": res.reconfig_count,
+        # hysteresis calibration pair (ROADMAP item 1): windows where a
+        # candidate cleared the raw gain threshold vs switches executed —
+        # considered >> executed means the net-gain pricing is filtering,
+        # considered == 0 on a drifting mix means the criterion is blind
+        "switch_considered": res.switch_considered,
         "finished": res.finished,
         "wall_s": wall,
         "trajectory": {
@@ -208,6 +221,24 @@ def run_matrix(
                 cells[f"{scen}/{system}"] = cell
                 if progress is not None:
                     progress(cell)
+                # calibration gate: on the drifting-mix scenario the
+                # adaptive policy must both SEE switch candidates and
+                # EXECUTE some (considered/executed finite and nonzero) —
+                # zero considered over a full mix inversion means the
+                # criterion is blind, zero executed means the hysteresis
+                # is too sticky (the symmetric bug to thrashing). Quick
+                # 90 s smokes are exempt: the rolling demand stats barely
+                # see the mix move before the trace ends.
+                if (scen == "tier_drift" and system == "nitsum"
+                        and horizon_s >= 300.0):
+                    if not (cell["switch_considered"] > 0
+                            and cell["reconfig_count"] > 0):
+                        raise AssertionError(
+                            f"tier_drift hysteresis calibration failed at "
+                            f"{n_chips} chips: switch_considered="
+                            f"{cell['switch_considered']} reconfig_count="
+                            f"{cell['reconfig_count']} (both must be > 0)"
+                        )
         payloads[n_chips] = {
             "n_chips": n_chips,
             "horizon_s": horizon_s,

@@ -12,16 +12,34 @@ module is a pure speed benchmark: the acceptance bar is a sim/wall ratio
 """
 from __future__ import annotations
 
+import math
 import time
 
 from benchmarks.common import CANDIDATE_TPS, MODEL, N_CHIPS, Row, save_json
 from repro.configs import get_config
+from repro.profiles import perf_model as pm
 from repro.profiles.perf_model import PerfModel, clear_perf_caches
 from repro.profiles.slo import derive_tiers
 from repro.serving.simulator import run_system
 from repro.traces.servegen import servegen_two_tier
 
 SYSTEMS = ("nitsum", "sglang")
+
+# The pre-margin length grid (LEN_QUANT_REL=0.2%): the control leg replays
+# nitsum on it to price what the TPOT_DESIGN_MARGIN-funded 5x coarsening
+# buys (docs/simulator.md §Cache-key).
+FINE_LEN_QUANT_REL = 0.002
+
+
+def _timed_replay(system, perf, tiers, wl, reps: int) -> float:
+    wall = float("inf")
+    for _ in range(reps):
+        clear_perf_caches()
+        t0 = time.perf_counter()
+        run_system(system, perf, tiers, N_CHIPS, wl,
+                   candidate_tps=CANDIDATE_TPS)
+        wall = min(wall, time.perf_counter() - t0)
+    return wall
 
 
 def run(quick: bool = False):
@@ -60,6 +78,30 @@ def run(quick: bool = False):
             f"goodput={res.goodput:.2f}",
         ))
     payload["combined_sim_per_wall"] = 2 * horizon_s / tot_wall
+
+    # Fine-grid control: same nitsum replay on the retired 0.2% length
+    # grid. quantize_len reads module-level _LN_Q, so both globals must be
+    # patched together and every memo cleared on entry AND exit.
+    coarse_wall = payload["systems"]["nitsum"]["wall_s"]
+    saved = (pm.LEN_QUANT_REL, pm._LN_Q)
+    try:
+        pm.LEN_QUANT_REL = FINE_LEN_QUANT_REL
+        pm._LN_Q = math.log1p(FINE_LEN_QUANT_REL)
+        fine_wall = _timed_replay("nitsum", perf, tiers, wl, reps)
+    finally:
+        pm.LEN_QUANT_REL, pm._LN_Q = saved
+        clear_perf_caches()
+    payload["fine_grid_control"] = {
+        "len_quant_rel": FINE_LEN_QUANT_REL,
+        "wall_s": fine_wall,
+        "coarse_grid_speedup": fine_wall / coarse_wall,
+    }
+    rows.append(Row(
+        "sim.replay_nitsum_fine_grid.wall",
+        fine_wall * 1e6,
+        f"{fine_wall / coarse_wall:.2f}x slower than the 1% grid",
+    ))
+
     save_json("sim_throughput", payload)
     rows.append(Row(
         "sim.replay_combined.wall",

@@ -22,7 +22,11 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.goodput import SLOTier
-from repro.profiles.perf_model import PerfModel
+from repro.profiles.perf_model import (
+    PerfModel,
+    TPOT_DESIGN_MARGIN,
+    mid_decode_ctx,
+)
 
 
 @dataclass(frozen=True)
@@ -97,10 +101,19 @@ class Planner:
     def stage_throughputs(
         self, tier: SLOTier, demand: TierDemand, tp_p: int, tp_d: int
     ) -> Tuple[float, float]:
-        """(THP, THD): SLO-compliant req/s per prefill / decode *group*."""
+        """(THP, THD): SLO-compliant req/s per prefill / decode *group*.
+
+        The decode rate is designed at the demand's mid-decode context
+        with the TPOT slack margin — the exact operating point the
+        simulator's runtime caps (Policy.decode_cap) are derived at, so
+        the plan's group sizing and the groups' realized batch sizes
+        agree. Designing at the bare prompt length overstated decode
+        capacity on long-output regimes and understated it on long-prompt
+        ones."""
         thp = self.perf.max_prefill_rps(demand.prompt_len, tp_p, tier.ttft_ms)
         thd = self.perf.max_decode_rps(
-            demand.prompt_len, demand.output_len, tp_d, tier.tpot_ms
+            mid_decode_ctx(demand.prompt_len, demand.output_len),
+            demand.output_len, tp_d, tier.tpot_ms * TPOT_DESIGN_MARGIN,
         )
         return thp, thd
 

@@ -39,7 +39,7 @@ from __future__ import annotations
 import bisect
 import heapq
 import math
-from collections import deque
+from collections import Counter, deque
 from dataclasses import dataclass, field, replace
 from itertools import count
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -50,7 +50,11 @@ from repro.core.goodput import GoodputMeter, RequestRecord, SLOTier
 from repro.core.incidents import analyze_incidents
 from repro.core.migration import MigrationModel
 from repro.core.planner import Planner, PlannerInputs, TierDemand
-from repro.profiles.perf_model import PerfModel
+from repro.profiles.perf_model import (
+    PerfModel,
+    TPOT_DESIGN_MARGIN,
+    mid_decode_ctx,
+)
 from repro.serving.global_scheduler import (
     GlobalScheduler,
     GroupHandle,
@@ -383,6 +387,19 @@ class DecodeBatch:
             self._data[self._TOK, :b] += g
             self._pfx_b = -1
 
+    def window_charge(self, g: float, b: int, win: float) -> float:
+        """KV tokens a uniform gain ``g`` over the running batch actually
+        adds when per-sequence residency is clamped to a sliding window:
+        sequences already at the window contribute nothing, sequences
+        crossing it during the gain contribute only the part below it.
+        Must be called BEFORE gain() applies ``g``."""
+        self._materialize()
+        data = self._data
+        c0 = np.minimum(data[self._PROMPT, :b], win) + data[self._TOK, :b]
+        return float(
+            (np.minimum(c0 + g, win) - np.minimum(c0, win)).sum()
+        )
+
     def crossers(self, b: int) -> np.ndarray:
         if self._pfx_b == b and self._pfx_min_rem > _EPS:
             return _NO_CROSSERS
@@ -416,7 +433,7 @@ class Group:
         "gid", "spec", "sim", "prefill_q", "cur", "decode", "blocked_until",
         "batch_cap", "t_sync", "_epoch", "_ev_kind", "_step", "_batch_n",
         "_decode_active", "kv_tokens", "kv_seqs", "kv_capacity_bytes",
-        "_static_cap", "_kv_win", "slow_factor",
+        "ctx_ewma", "_cap_ctx", "_kv_win", "slow_factor",
     )
 
     def __init__(self, gid: int, spec: GroupSpec, sim: "Simulator"):
@@ -432,7 +449,13 @@ class Group:
         self.cur: Optional[SimReq] = None
         self.blocked_until: float = 0.0
         self.batch_cap = sim.decode_cap(spec)
-        self._static_cap = self.batch_cap  # cap at the CTX_REF design point
+        # realized mean decode context, time-weighted EWMA over decode
+        # activity (tau = sim.ctx_ewma_tau_s); 0.0 = no signal yet, caps
+        # fall back to the demand-derived design context
+        self.ctx_ewma: float = 0.0
+        # the design context batch_cap was derived at — refresh_cap only
+        # re-derives once the realized context drifts cap_drift_frac away
+        self._cap_ctx: float = sim.policy.design_ctx(sim, spec)
         self.decode = DecodeBatch(self.batch_cap)
         # --- live KV occupancy (docs/simulator.md §KV occupancy) ---
         # kv_tokens: tokens resident on this group's HBM — every decode
@@ -460,13 +483,17 @@ class Group:
         self.kv_seqs += seqs
 
     def _kv_ctx(self, r: SimReq) -> float:
-        """The request's charged KV tokens: window-clamped prompt plus
-        generated tokens (generation growth is charged unclamped — for
-        sliding-window models this overstates residency by at most the
-        tokens generated beyond the window, a conservative error bounded
-        by the output length)."""
+        """The request's charged KV tokens: prompt plus generated tokens,
+        with the TOTAL clamped to the sliding window — a window model
+        evicts the oldest token as each new one lands, so residency never
+        exceeds the window no matter how long the output runs (consistent
+        with seq_kv_bytes and the clamped decode-gain charges; the old
+        unclamped generation charge spuriously tripped the kv_watermark
+        spill path on long-output swa traces)."""
         p = r.tr.prompt_len
-        return (p if p < self._kv_win else self._kv_win) + r.tokens
+        win = self._kv_win
+        tot = (p if p < win else win) + r.tokens
+        return tot if tot < win else win
 
     def kv_bytes(self) -> float:
         perf = self.sim.perf
@@ -486,20 +513,25 @@ class Group:
         )
 
     def refresh_cap(self) -> bool:
-        """Re-derive the decode batch cap from the batch's current mean
-        context and the group's KV budget; returns True iff batch
-        membership changed. Called by both engines before each decode
-        step-time evaluation. Fast path: at or below the CTX_REF design
-        point the dynamic memory term never binds (decode_cap returns the
-        static cap), so the policy call is skipped entirely — the hot
-        short-context replay pays two comparisons per event."""
+        """Re-derive the decode batch cap at the group's realized context
+        (the EWMA `design_ctx` tracks); returns True iff batch membership
+        changed. Called by the engine before each decode step-time
+        evaluation. Fast path: while the realized context stays within
+        cap_drift_frac of the context the current cap was designed at,
+        the cap cannot have moved meaningfully (the TPOT margin absorbs
+        sub-drift error), so the policy call is skipped — the hot
+        steady-state replay pays one comparison per event."""
+        sim = self.sim
         decode = self.decode
         b = decode.batch_len
-        sim = self.sim
-        if not b or decode.mean_ctx(b) <= sim.policy.CTX_REF:
-            cap = self._static_cap
-        else:
-            cap = sim.decode_cap(self.spec, self)
+        ctx = self.ctx_ewma
+        if ctx <= 0.0 and b:
+            ctx = decode.mean_ctx(b)
+        ref = self._cap_ctx
+        if ctx > 0.0 and ref > 0.0 and abs(ctx - ref) <= sim.cap_drift_frac * ref:
+            return False
+        cap = sim.decode_cap(self.spec, self)
+        self._cap_ctx = sim.policy.design_ctx(sim, self.spec, self)
         if cap == self.batch_cap:
             return False
         self.batch_cap = cap
@@ -576,8 +608,25 @@ class Group:
             )
         elif self._decode_active and len(self.decode):
             gain = dt / self._step  # _step already carries slow_factor
-            self.decode.gain(gain, self._batch_n)
-            self._kv_charge(gain * self._batch_n, 0)
+            b = self._batch_n
+            # realized-context EWMA (decode-time-weighted): the design
+            # point refresh_cap re-derives the cap at once it drifts
+            ctx = self.decode.mean_ctx(b) + 0.5 * gain
+            ew = self.ctx_ewma
+            if ew <= 0.0:
+                self.ctx_ewma = ctx
+            else:
+                self.ctx_ewma = ew + (ctx - ew) * (
+                    dt / (dt + self.sim.ctx_ewma_tau_s)
+                )
+            if self._kv_win is math.inf:
+                charged = gain * b
+            else:
+                # sliding-window model: per-sequence residency saturates
+                # at the window, so only the unsaturated part is charged
+                charged = self.decode.window_charge(gain, b, self._kv_win)
+            self.decode.gain(gain, b)
+            self._kv_charge(charged, 0)
         self.t_sync = t
 
     def arm(self) -> float:
@@ -636,10 +685,35 @@ class Policy:
         self.tiers = {t.name: t for t in tiers}
         self.tps = tuple(candidate_tps)
 
-    # decode caps are designed at a fixed reference context: the TPOT term
-    # must not drift with the live batch (the planner sizes groups at this
-    # exact boundary), while the memory term IS dynamic (decode_cap below)
-    CTX_REF = 2048
+    # Decode caps are designed at the context the group actually serves:
+    # the realized batch-context EWMA when one exists, else the
+    # demand-derived mid-decode context, else CTX_REF as a last resort.
+    # The TPOT budget carries an explicit slack margin (TPOT_MARGIN) so a
+    # cap-sized batch runs safely inside the SLO rather than exactly on
+    # the boundary — the margin is what lets the perf-model length grid
+    # run 5x coarser (docs/simulator.md §Decode-caps, §Cache-key).
+    CTX_REF = 2048  # fallback design point only: no demand stats, no batch
+    TPOT_MARGIN = TPOT_DESIGN_MARGIN
+    # Layouts are scored (and planned) against the observed rate plus
+    # burst headroom, not the bare observed rate: capping the estimate at
+    # raw demand made every demand-meeting layout tie exactly, so the
+    # switch criterion could never see a drifting mix eroding one tier's
+    # headroom until the SLOs were already blown (tier_drift fired zero
+    # switches over a full mix inversion).
+    DEMAND_HEADROOM = 1.2
+
+    def design_ctx(
+        self, sim: "Simulator", spec: "GroupSpec",
+        group: Optional["Group"] = None,
+    ) -> float:
+        """The context length a group's decode cap (and the planner's
+        matching decode-rate estimate) is designed at."""
+        if group is not None and group.ctx_ewma > 0.0:
+            return group.ctx_ewma
+        d = sim.tier_stats(spec.tier)
+        if d.rps > 0.0:
+            return mid_decode_ctx(d.prompt_len, d.output_len)
+        return float(self.CTX_REF)
 
     def _cap_tpot_ms(self, spec: "GroupSpec") -> float:
         if not self.slo_aware_batching:
@@ -658,30 +732,34 @@ class Policy:
         self, sim: "Simulator", spec: "GroupSpec", group: Optional["Group"] = None
     ) -> int:
         tpot = self._cap_tpot_ms(spec)
-        cap = self.perf.max_decode_batch(self.CTX_REF, spec.tp, tpot)
-        if group is not None and self.perf.kv_bytes_per_token() > 0:
+        if tpot < 1e9:
+            tpot *= self.TPOT_MARGIN
+        ctx = self.design_ctx(sim, spec, group)
+        cap = self.perf.max_decode_batch(ctx, spec.tp, tpot)
+        if group is not None and (
+            self.perf.kv_bytes_per_token() > 0 or self.perf.state_bytes() > 0
+        ):
             # dynamic memory term: how many sequences at the batch's CURRENT
-            # mean context fit the group's watermarked KV budget, minus the
-            # bytes held by NON-batch residents (waiting-heap members and
-            # the in-flight prefill keep their KV while evicted from the
-            # batch). Batch members' own bytes stay in the budget — the
-            # batch being sized IS that part of the occupancy — so they are
-            # not double-counted. Long contexts shrink the admissible batch
-            # far below the static CTX_REF headroom.
+            # mean context fit the group's watermarked KV budget. The budget
+            # is the FULL watermarked capacity — the batch being sized is
+            # the occupancy, so subtracting resident bytes would
+            # double-count. In particular the waiting heap must NOT be
+            # subtracted: shrinking the running batch frees no waiter KV
+            # (waiters keep their cache while evicted), so a
+            # budget-minus-waiters rule feeds itself — a small cap grows
+            # the heap, which shrinks the budget, which shrinks the cap,
+            # until whole groups decode at batch=1 (the prefill_heavy/512
+            # collapse). Total residency is the admission watermark's job
+            # (_kv_backpressure), not the cap's.
             b = group.decode.batch_len
-            ctx = group.decode.mean_ctx(b) if b else float(self.CTX_REF)
-            if ctx > self.CTX_REF:
-                batch_bytes = b * self.perf.seq_kv_bytes(ctx)
-                non_batch = max(group.kv_bytes() - batch_bytes, 0.0)
-                budget = max(
-                    sim.kv_watermark * group.kv_capacity_bytes - non_batch, 0.0
-                )
-                cap = min(
-                    cap,
-                    self.perf.max_decode_batch(
-                        ctx, spec.tp, 1e9, hbm_free_bytes=budget
-                    ),
-                )
+            cur = group.decode.mean_ctx(b) if b else ctx
+            budget = sim.kv_watermark * group.kv_capacity_bytes
+            cap = min(
+                cap,
+                self.perf.max_decode_batch(
+                    cur, spec.tp, 1e9, hbm_free_bytes=budget
+                ),
+            )
         return max(cap, 1)
 
     def estimate_specs(self, sim: "Simulator", specs) -> float:
@@ -690,14 +768,35 @@ class Policy:
         Shared (tier=None) groups are split demand-proportionally across
         tiers — a hard 50/50 split would systematically undervalue shared
         pools and bias the planner toward needless partitioning."""
+        demands = self._live_demands(sim)
+        caps = self._tier_caps(sim, specs, demands)
+        return sum(
+            min(thp, thd, demands[name].rps * self.DEMAND_HEADROOM)
+            for name, (thp, thd) in caps.items()
+        )
+
+    def _live_demands(self, sim: "Simulator") -> Dict[str, "TierDemand"]:
         demands = {}
         for t in self.tiers.values():
             if not t.background:
                 d = sim.tier_stats(t.name)
                 if d.rps > 0:
                     demands[t.name] = d
+        return demands
+
+    def _tier_caps(self, sim, specs, demands) -> Dict[str, tuple]:
+        """Per-tier (prefill, decode) SLO-compliant capacity of a layout,
+        shared groups split demand-proportionally."""
         tot_rps = sum(d.rps for d in demands.values()) or 1.0
-        total = 0.0
+        # a shared group's decode batch is sized by the STRICTEST tier it
+        # may serve (_cap_tpot_ms takes the min) — the estimate must use
+        # the same budget or shared pools are credited with relaxed-tier
+        # capacity the runtime cap never grants
+        strictest = min(
+            (t.tpot_ms for t in self.tiers.values() if not t.background),
+            default=1e9,
+        )
+        caps: Dict[str, tuple] = {}
         for name, d in demands.items():
             t = self.tiers[name]
             thp = thd = 0.0
@@ -714,11 +813,42 @@ class Policy:
                         d.prompt_len, s.tp, t.ttft_ms
                     )
                 if s.stage in ("decode", "mixed"):
-                    thd += w * share * self.perf.max_decode_rps(
-                        d.prompt_len, d.output_len, s.tp, t.tpot_ms
+                    # same design point as the runtime caps (decode_cap):
+                    # mid-decode context, TPOT budget with the slack margin
+                    # — estimates and realized group behaviour must agree
+                    # or plans systematically mis-size decode capacity
+                    tpot = t.tpot_ms if s.tier == name else min(
+                        t.tpot_ms, strictest
                     )
-            total += min(thp, thd, d.rps)
-        return total
+                    if self.slo_aware_batching:
+                        tpot *= self.TPOT_MARGIN
+                    thd += w * share * self.perf.max_decode_rps(
+                        mid_decode_ctx(d.prompt_len, d.output_len),
+                        d.output_len, s.tp, tpot,
+                    )
+            caps[name] = (thp, thd)
+        return caps
+
+    def mix_headroom_rps(self, sim: "Simulator", specs) -> float:
+        """The total arrival rate the layout could serve if demand scaled
+        up uniformly at the CURRENT tier mix — i.e. burst headroom at the
+        realized mix, min over tiers of capacity/mix-share.
+
+        This is the drift signal the served-rate estimate cannot carry:
+        when mean demand is met by every candidate layout (estimate_specs
+        ties at the demand cap), a drifting mix still erodes the growing
+        tier's headroom, and bursty arrivals cash that headroom out as
+        goodput. tier_drift fired ZERO switches over a full strict:relaxed
+        inversion before this term existed."""
+        demands = self._live_demands(sim)
+        if not demands:
+            return 0.0
+        tot_rps = sum(d.rps for d in demands.values())
+        caps = self._tier_caps(sim, specs, demands)
+        return min(
+            min(thp, thd) * tot_rps / demands[name].rps
+            for name, (thp, thd) in caps.items()
+        )
 
     def initial_specs(self, sim: "Simulator") -> List[GroupSpec]:
         raise NotImplementedError
@@ -811,17 +941,43 @@ class SLOStaticPolicy(StaticPolicy):
     slo_aware_prefill = True
 
     def __init__(self, perf, tiers, **kw):
-        # best static TP for the pool by the same profile the planner uses
-        best, best_tp = -1.0, perf.min_tp(kw.get("candidate_tps", (1, 2, 4, 8)))
-        for tp in kw.get("candidate_tps", (1, 2, 4, 8)):
-            t0 = list(tiers)[0]
-            thp = perf.max_prefill_rps(1024, tp, t0.ttft_ms)
-            thd = perf.max_decode_rps(1024, 128, tp, t0.tpot_ms)
-            rate = min(thp, thd) / tp if min(thp, thd) > 0 else 0.0
+        # the TP is sized at initial_specs time from the trace's realized
+        # demand stats (like its sibling SplitPolicy) — a hardcoded
+        # 1024/128 operating point flattered short traces and starved
+        # length-heavy ones; min_tp is only the pre-trace placeholder
+        super().__init__(
+            perf, tiers,
+            tp=perf.min_tp(kw.get("candidate_tps", (1, 2, 4, 8))), **kw,
+        )
+        self.name = "sglang-slo"
+
+    def initial_specs(self, sim):
+        # best static TP for the pool by the same profile (and the same
+        # margin-designed decode operating point) the planner uses, at the
+        # trace's observed per-tier demand
+        best, best_tp = -1.0, self.tp
+        for tp in self.tps:
+            if tp > sim.n_chips or not self.perf.fits(tp):
+                continue
+            rate = 0.0
+            for t in self.tiers.values():
+                if t.background:
+                    continue
+                d = sim.tier_stats(t.name)
+                if d.rps <= 0:
+                    continue
+                thp = self.perf.max_prefill_rps(d.prompt_len, tp, t.ttft_ms)
+                thd = self.perf.max_decode_rps(
+                    mid_decode_ctx(d.prompt_len, d.output_len),
+                    d.output_len, tp, t.tpot_ms * self.TPOT_MARGIN,
+                )
+                rate += min(thp, thd)
+            rate /= tp
             if rate > best:
                 best, best_tp = rate, tp
-        super().__init__(perf, tiers, tp=best_tp, **kw)
+        self.tp = best_tp
         self.name = f"sglang-slo-tp{best_tp}"
+        return super().initial_specs(sim)
 
 
 class SplitPolicy(Policy):
@@ -981,8 +1137,11 @@ class NitsumPolicy(Policy):
                 continue
             d = sim.tier_stats(t.name)
             if d.rps > 0:
-                # burst headroom: plan for 1.2x the observed window rate
-                demands[t.name] = TierDemand(d.rps * 1.2, d.prompt_len, d.output_len)
+                # burst headroom: plan for the same headroom the layout
+                # estimator scores against (Policy.DEMAND_HEADROOM)
+                demands[t.name] = TierDemand(
+                    d.rps * self.DEMAND_HEADROOM, d.prompt_len, d.output_len
+                )
         tp0 = self.perf.min_tp(self.tps)
         if not demands:
             return [GroupSpec(None, "mixed", tp0)] * (sim.n_chips // tp0)
@@ -1001,12 +1160,45 @@ class NitsumPolicy(Policy):
             specs += [GroupSpec(tier, "decode", tp.decode.tp)] * int(
                 tp.decode.chips // tp.decode.tp
             )
-        # leftover chips: shared mixed groups at the smallest feasible TP —
-        # this is where spilled best-effort and background work lands
+        # leftover chips: shared mixed groups at the TP the aggregate
+        # demand's own design point favours (same estimator as the group
+        # sizing) — this is where spilled best-effort and background work
+        # lands, and on length-heavy regimes most of the pool ends up
+        # here, so hardcoding min_tp let a 2x-worse per-chip operating
+        # point dominate the cluster
         used = sum(s.tp for s in specs)
         left = sim.n_chips - used
+        tp_s = self._shared_tp(sim)
+        specs += [GroupSpec(None, "mixed", tp_s)] * (left // tp_s)
+        left -= (left // tp_s) * tp_s
         specs += [GroupSpec(None, "mixed", tp0)] * (left // tp0)
         return specs
+
+    def _shared_tp(self, sim) -> int:
+        """TP for the leftover shared pool: best per-chip
+        min(prefill, margin-designed decode) rate at the aggregate demand
+        under the strictest SLOs a shared group must honour (the shared
+        cap rule in _cap_tpot_ms)."""
+        tp0 = self.perf.min_tp(self.tps)
+        d = sim.tier_stats(None)
+        if d.rps <= 0:
+            return tp0
+        live = [t for t in self.tiers.values() if not t.background]
+        if not live:
+            return tp0
+        ttft = min(t.ttft_ms for t in live)
+        tpot = min(t.tpot_ms for t in live) * self.TPOT_MARGIN
+        ctx = mid_decode_ctx(d.prompt_len, d.output_len)
+        best, best_tp = -1.0, tp0
+        for tp in self.tps:
+            if tp > sim.n_chips or not self.perf.fits(tp):
+                continue
+            thp = self.perf.max_prefill_rps(d.prompt_len, tp, ttft)
+            thd = self.perf.max_decode_rps(ctx, d.output_len, tp, tpot)
+            rate = min(thp, thd) / tp
+            if rate > best:
+                best, best_tp = rate, tp
+        return best_tp
 
     def _mk_plan_with_shared(self, sim) -> List[GroupSpec]:
         """Planner output vs uniform shared mixed pools: take the best by
@@ -1024,31 +1216,102 @@ class NitsumPolicy(Policy):
         self._cur_specs = self._mk_plan_with_shared(sim)
         return self._cur_specs
 
+    # restart-priced switch criterion: a candidate layout must clear a
+    # small raw gain threshold (noise floor; counted as switch_considered)
+    # AND pay for the restart it causes — the estimated rps gain over one
+    # amortization horizon must exceed the requests forfeited by the
+    # switch itself (stalls + redone in-flight prefill work). The old
+    # criterion was a bare >15% raw-gain test: blind to prompt length, it
+    # both fired on cheap noise and never priced a genuinely expensive
+    # restart.
+    #
+    # Two raw signals feed the threshold: the served-rate estimate (a
+    # tier is capacity-bound) and mix headroom (mean demand is met but a
+    # drifting mix is eroding one tier's burst margin — see
+    # mix_headroom_rps). Headroom gains are discounted by burst_credit
+    # (only the burst-riding fraction of arrivals cashes headroom out as
+    # goodput) and clamped at headroom_ceil x demand (margin beyond the
+    # burst envelope is worthless, so the criterion does not chase raw
+    # capacity).
+    gain_threshold = 1.05
+    switch_amortize_s = 30.0
+    burst_credit = 0.25
+    headroom_ceil = 2.0
+
     def window(self, sim):
         if not self.dynamic_tp:
             return None
-        # sustained-signal hysteresis: in-flight prefills restart on a group
-        # rebuild, so a switch must be justified by a >15% estimated gain in
-        # THREE consecutive windows — transient demand noise never switches,
-        # real mix shifts switch within ~3 s (well inside the paper's
-        # 0.5-1 s x burst-length envelope)
         new = self._mk_plan_with_shared(sim)
         cur = getattr(self, "_cur_specs", None)
         if cur is None:
             self._cur_specs = new
             return new
-        gain = self.estimate_specs(sim, new) > 1.15 * self.estimate_specs(sim, cur)
-        if gain:
+        est_new = self.estimate_specs(sim, new)
+        est_cur = self.estimate_specs(sim, cur)
+        tot_rps = sum(d.rps for d in self._live_demands(sim).values())
+        ceil = self.headroom_ceil * tot_rps
+        hr_new = min(self.mix_headroom_rps(sim, new), ceil)
+        hr_cur = min(self.mix_headroom_rps(sim, cur), ceil)
+        raw = (
+            est_new > self.gain_threshold * est_cur
+            or hr_new > self.gain_threshold * hr_cur
+        )
+        if raw:
             # calibration counter (ROADMAP item 1): windows where a switch
-            # candidate cleared the gain threshold, whether or not the
-            # hysteresis streak let it through — no criterion change here
+            # candidate cleared the raw gain threshold, whether or not the
+            # net-gain test and the hysteresis streak let it through
             sim.switch_considered += 1
+        gain_rps = max(
+            est_new - est_cur, (hr_new - hr_cur) * self.burst_credit
+        )
+        gain = raw and (
+            gain_rps * self.switch_amortize_s
+            > self.restart_cost_reqs(sim, new, est_cur)
+        )
+        # sustained-signal hysteresis: net gain must hold in THREE
+        # consecutive windows — transient demand noise never switches,
+        # real mix shifts switch within ~3 s (well inside the paper's
+        # 0.5-1 s x burst-length envelope)
         self._gain_streak = getattr(self, "_gain_streak", 0) + 1 if gain else 0
         if self._gain_streak < 3:
             return None
         self._gain_streak = 0
         self._cur_specs = new
         return new
+
+    def restart_cost_reqs(self, sim, new: List[GroupSpec], est_cur: float) -> float:
+        """Requests forfeited by applying ``new``, in the same units as
+        (estimated rps gain) x switch_amortize_s. Groups whose spec
+        survives the multiset diff (what _apply_specs keeps) cost
+        nothing. A dissolved group costs (a) its chip-share of the
+        current served rate for the switch stall, and (b) its in-flight
+        prefill's completed work, redone from scratch after the restart —
+        a term that scales with the queued prompt length, which is
+        exactly what the raw-gain criterion ignored (4-6k-token prompts
+        make restarts ~20x pricier than chat-length ones)."""
+        avail = Counter((s.tier or "", s.stage, s.tp) for s in new)
+        n_chips = max(sim.n_chips, 1)
+        cost = 0.0
+        for g in sim.groups:
+            k = (g.spec.tier or "", g.spec.stage, g.spec.tp)
+            if avail[k] > 0:
+                avail[k] -= 1
+                continue
+            g.decode.sync()  # switch_cost_s reads per-request contexts
+            stall = self.switch_cost_s(sim, g)
+            cost += est_cur * (g.spec.tp / n_chips) * stall
+            if g.cur is not None:
+                total = self.perf.prefill_time_s(
+                    g.cur.tr.prompt_len, g.spec.tp
+                )
+                done = max(total - g.cur.prefill_left_s, 0.0)
+                # the redone seconds occupy the restarted group before it
+                # is back where it was — priced like the stall (so a 6k
+                # prompt half-prefilled costs ~10x a 512-token one) —
+                # plus the request's own forfeited progress fraction
+                cost += est_cur * (g.spec.tp / n_chips) * done
+                cost += done / max(total, 1e-9)
+        return cost
 
     def switch_cost_s(self, sim, group: Group) -> float:
         # KV bytes resident on the group that must migrate (window-clamped,
@@ -1323,6 +1586,8 @@ class Simulator:
         grid_parity: bool = True,
         kv_watermark: float = 0.9,
         kv_audit: bool = False,
+        ctx_ewma_tau_s: float = 5.0,
+        cap_drift_frac: float = 0.05,
     ):
         if engine != "event":
             raise ValueError(
@@ -1350,6 +1615,11 @@ class Simulator:
         # target's projected occupancy would cross kv_watermark × capacity
         self.kv_watermark = kv_watermark
         self.kv_audit = kv_audit
+        # realized-context cap design (docs/simulator.md §Decode-caps):
+        # per-group context EWMA time constant, and the relative context
+        # drift beyond which refresh_cap re-derives the batch cap
+        self.ctx_ewma_tau_s = ctx_ewma_tau_s
+        self.cap_drift_frac = cap_drift_frac
         self.spill_counts: Dict[str, int] = {t.name: 0 for t in tiers}
         self.spill_timeline: List[Tuple[float, int]] = []
         self.reconfig_timeline: List[Tuple[float, int]] = []
@@ -1548,7 +1818,11 @@ class Simulator:
         req.first_token_s = t
         req.tokens = 1.0
         req.group = group
-        group._kv_charge(1.0, 0)  # the first generated token's KV
+        # the first generated token's KV (window models at a saturated
+        # prompt evict one prompt token for it: net zero residency)
+        group._kv_charge(
+            1.0 if req.tr.prompt_len < group._kv_win else 0.0, 0
+        )
         if req.dispatch_gid is not None and isinstance(self.policy, NitsumPolicy):
             if self.policy.gs is not None:
                 self.policy.gs.complete(req.dispatch_gid, req.rate_cost)

@@ -1,0 +1,81 @@
+"""CI gate for the length-heavy scenario regimes (ROADMAP item 1).
+
+The PR-3 matrix showed nitsum losing both single-length-regime contests
+to the SLO-agnostic static baseline (decode_heavy ~2.7x, prefill_heavy
+~5x) while winning every MIX scenario — a design-point bug, since fixed.
+This gate keeps those regimes from silently regressing again: on the
+quick scenario matrix,
+
+  * nitsum must stay within ``LENGTH_REGIME_RATIO`` (1.3x) of the static
+    baseline on every length-regime cell (prefill_heavy, decode_heavy);
+  * nitsum must still WIN (>=) every MIX scenario cell outright.
+
+Run as a module (CI slow lane)::
+
+    PYTHONPATH=src python -m repro.testing.length_regime_gate
+
+which replays the quick matrix (90 s horizons) and exits nonzero with a
+per-cell report on any violation. ``gate_violations`` is pure and unit
+tested against recorded payloads.
+"""
+from __future__ import annotations
+
+import sys
+from typing import Dict, List
+
+LENGTH_REGIME_RATIO = 1.3
+
+
+def gate_violations(payload: Dict) -> List[str]:
+    """Check one per-cluster scenario-matrix payload; returns violation
+    strings (empty == gate passed). Scenarios missing either system's
+    cell are skipped — the gate judges contests, not coverage."""
+    from benchmarks.scenario_matrix import LENGTH_REGIMES
+
+    n = payload.get("n_chips", "?")
+    out: List[str] = []
+    for scen in payload.get("scenarios", ()):
+        git = payload["cells"].get(f"{scen}/nitsum")
+        sta = payload["cells"].get(f"{scen}/sglang")
+        if not git or not sta:
+            continue
+        g, s = git["goodput"], sta["goodput"]
+        if scen in LENGTH_REGIMES:
+            if g * LENGTH_REGIME_RATIO < s:
+                out.append(
+                    f"{n}chips/{scen}: nitsum {g:.1f} vs static {s:.1f} "
+                    f"req/s — outside the {LENGTH_REGIME_RATIO}x "
+                    f"length-regime bound"
+                )
+        elif g < s:
+            out.append(
+                f"{n}chips/{scen}: nitsum {g:.1f} lost a MIX scenario to "
+                f"static {s:.1f} req/s"
+            )
+    return out
+
+
+def main() -> int:
+    from benchmarks.scenario_matrix import QUICK_MATRIX, run_matrix
+
+    payloads = run_matrix(QUICK_MATRIX)
+    violations: List[str] = []
+    for n_chips, payload in sorted(payloads.items()):
+        violations += gate_violations(payload)
+        for key, cell in payload["cells"].items():
+            print(
+                f"# length_regime_gate {n_chips}chips {key}: "
+                f"goodput={cell['goodput']:.1f}",
+                flush=True,
+            )
+    if violations:
+        print("LENGTH-REGIME GATE FAILED:", file=sys.stderr)
+        for v in violations:
+            print(f"  - {v}", file=sys.stderr)
+        return 1
+    print("# length_regime_gate: all cells within bounds")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,251 @@
+"""Context-designed decode caps + the restart-priced switch criterion.
+
+Covers the design-point fixes (docs/simulator.md §Decode-caps):
+  * caps are designed at the group's REALIZED context (EWMA), not a fixed
+    CTX_REF=2048 — cap rises when the realized context is shorter than
+    the old design point, falls when longer;
+  * the explicit TPOT slack margin is never exceeded at the boundary: a
+    margin-designed cap's realized per-token time stays inside the
+    unmargined SLO even with the 5x-coarsened length grid;
+  * NitsumPolicy.window rejects a switch whose raw estimated gain does
+    not clear its restart cost (restart_cost_reqs), and prices in-flight
+    prefill work by prompt length;
+  * max_prefill_rps stays sane at 4-6k-token prompts, and the nitsum
+    initial layout's estimated prefill capacity on a prefill-heavy trace
+    matches the static baseline's.
+"""
+import pytest
+
+from repro.configs import get_config
+from repro.profiles.perf_model import (
+    TPOT_DESIGN_MARGIN,
+    PerfModel,
+    mid_decode_ctx,
+)
+from repro.profiles.slo import derive_tiers
+from repro.serving.simulator import (
+    Group,
+    GroupSpec,
+    NitsumPolicy,
+    SimReq,
+    Simulator,
+    StaticPolicy,
+    run_system,
+)
+from repro.traces.workload import TraceRequest, make_workload
+
+
+@pytest.fixture(scope="module")
+def perf():
+    return PerfModel(get_config("llama3-8b"))
+
+
+@pytest.fixture(scope="module")
+def tiers(perf):
+    return derive_tiers(perf, prompt_len=900, ctx_len=1000)
+
+
+def _req(arrival=0.0, prompt=64, out=32, rid=0, tier="strict"):
+    return SimReq(TraceRequest(rid, tier, arrival, prompt, out))
+
+
+# ---------------------------------------------------------------------------
+# realized-context design point
+# ---------------------------------------------------------------------------
+def test_cap_rises_below_design_point_falls_above(perf, tiers):
+    """The cap is derived at the group's realized-context EWMA: short
+    realized contexts get a LARGER batch than the old fixed 2048-token
+    design point allowed, long ones a smaller."""
+    policy = StaticPolicy(perf, tiers, tp=2)
+    sim = Simulator(perf, tiers, 4, policy)
+    spec = GroupSpec(None, "mixed", 2)
+    grp = Group(0, spec, sim)
+
+    grp.ctx_ewma = 2048.0
+    cap_ref = sim.decode_cap(spec, grp)
+    grp.ctx_ewma = 600.0  # decode_heavy's realized mid-decode context
+    cap_short = sim.decode_cap(spec, grp)
+    grp.ctx_ewma = 8000.0
+    cap_long = sim.decode_cap(spec, grp)
+
+    assert cap_short > cap_ref > cap_long
+
+
+def test_refresh_cap_follows_context_drift(perf, tiers):
+    """refresh_cap re-derives the cap once the EWMA drifts past the
+    cap_drift_frac deadband of the context it was last designed at — and
+    skips the perf-model query inside the deadband."""
+    policy = StaticPolicy(perf, tiers, tp=2)
+    sim = Simulator(perf, tiers, 4, policy)
+    grp = Group(0, GroupSpec(None, "mixed", 2), sim)
+    calls = []
+    real = sim.decode_cap
+    sim.decode_cap = lambda *a, **kw: (calls.append(1), real(*a, **kw))[1]
+
+    grp.ctx_ewma = grp._cap_ctx * (1.0 + 0.5 * sim.cap_drift_frac)
+    grp.refresh_cap()
+    assert not calls  # inside the deadband: perf-model query skipped
+
+    grp.ctx_ewma = 600.0
+    grp.refresh_cap()
+    assert calls
+    cap_short = grp.batch_cap
+    assert grp._cap_ctx == pytest.approx(600.0)
+
+    grp.ctx_ewma = 8000.0
+    grp.refresh_cap()
+    assert grp.batch_cap < cap_short
+    assert grp._cap_ctx == pytest.approx(8000.0)
+
+
+def test_margin_never_exceeded_at_tpot_boundary(perf, tiers):
+    """A margin-designed cap must run strictly inside the unmargined SLO:
+    realized per-token time at the cap stays within the margined budget
+    (plus one grid bucket of slack) at every context/TP the caps see —
+    the slack the 5x-coarser length grid (LEN_QUANT_REL=1%) spends."""
+    tpot_slo = min(t.tpot_ms for t in tiers)
+    for tp in (2, 4, 8):
+        for ctx in (300, 600, 2048, 4096, 8192):
+            cap = perf.max_decode_batch(ctx, tp, tpot_slo * TPOT_DESIGN_MARGIN)
+            if cap < 1:
+                continue
+            realized = perf.tpot_ms(cap, ctx, tp)
+            # inside the margined budget modulo length-grid quantization
+            assert realized <= tpot_slo * TPOT_DESIGN_MARGIN * 1.03
+            # and therefore never at the actual SLO boundary
+            assert realized < tpot_slo
+
+
+def test_design_ctx_fallback_chain(perf, tiers):
+    """design point preference: group EWMA > tier demand stats > CTX_REF."""
+    policy = StaticPolicy(perf, tiers, tp=2)
+    sim = Simulator(perf, tiers, 4, policy)
+    spec = GroupSpec(None, "mixed", 2)
+    # no demand stats, no group: last-resort CTX_REF
+    assert policy.design_ctx(sim, spec) == float(policy.CTX_REF)
+    grp = Group(0, spec, sim)
+    assert policy.design_ctx(sim, spec, grp) == float(policy.CTX_REF)
+    grp.ctx_ewma = 1234.0
+    assert policy.design_ctx(sim, spec, grp) == 1234.0
+
+
+# ---------------------------------------------------------------------------
+# restart-priced switch criterion
+# ---------------------------------------------------------------------------
+def _switch_sim(perf, tiers):
+    policy = NitsumPolicy(perf, tiers)
+    sim = Simulator(perf, tiers, 16, policy)
+    sim.groups = [Group(i, GroupSpec(None, "mixed", 2), sim) for i in range(8)]
+    return policy, sim
+
+
+def test_raw_but_not_net_gain_is_rejected(perf, tiers, monkeypatch):
+    """A candidate that clears the 5% raw-gain threshold but cannot pay
+    for its restart is counted (switch_considered) and rejected."""
+    policy, sim = _switch_sim(perf, tiers)
+    new_layout = [GroupSpec(None, "mixed", 4)] * 4
+    policy._cur_specs = [g.spec for g in sim.groups]
+    monkeypatch.setattr(
+        NitsumPolicy, "_mk_plan_with_shared", lambda self, s: list(new_layout)
+    )
+    # raw gain 10% > threshold, but the net test must weigh it against
+    # the restart cost: price the restart above the amortized gain
+    monkeypatch.setattr(
+        NitsumPolicy, "estimate_specs",
+        lambda self, s, specs: 11.0 if list(specs) == new_layout else 10.0,
+    )
+    monkeypatch.setattr(NitsumPolicy, "mix_headroom_rps", lambda self, s, sp: 0.0)
+    monkeypatch.setattr(
+        NitsumPolicy, "restart_cost_reqs",
+        lambda self, s, new, est_cur: (11.0 - 10.0) * policy.switch_amortize_s + 1.0,
+    )
+    for _ in range(5):
+        assert policy.window(sim) is None
+    assert sim.switch_considered == 5
+    assert sim.reconfig_count == 0
+
+    # identical raw gain with an affordable restart switches after the
+    # 3-window hysteresis streak
+    monkeypatch.setattr(
+        NitsumPolicy, "restart_cost_reqs", lambda self, s, new, est_cur: 0.0
+    )
+    policy._gain_streak = 0
+    results = [policy.window(sim) for _ in range(3)]
+    assert results[0] is None and results[1] is None
+    assert results[2] == new_layout
+
+
+def test_restart_cost_scales_with_queued_prompt_length(perf, tiers):
+    """The in-flight-prefill term prices redone work by prompt length: a
+    dissolved group half-way through a 6k-token prefill costs more than
+    one half-way through a 512-token prefill."""
+    policy, sim = _switch_sim(perf, tiers)
+    new_layout = [GroupSpec(None, "mixed", 4)] * 4  # dissolves every group
+
+    def cost_with_prompt(plen):
+        for i, g in enumerate(sim.groups):
+            r = _req(prompt=plen, rid=i)
+            r.prefill_left_s = perf.prefill_time_s(plen, 2) / 2
+            g.cur = r
+        return policy.restart_cost_reqs(sim, new_layout, est_cur=10.0)
+
+    assert cost_with_prompt(6000) > cost_with_prompt(512)
+    # surviving specs cost nothing
+    for g in sim.groups:
+        g.cur = None
+    assert policy.restart_cost_reqs(
+        sim, [g.spec for g in sim.groups], est_cur=10.0
+    ) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# prefill capacity at 4-6k-token prompts (the prefill_heavy regime)
+# ---------------------------------------------------------------------------
+def test_max_prefill_rps_sane_at_long_prompts(perf):
+    """The M/M/1 bound stays internally consistent where prefill_heavy
+    lives: positive under a feasible TTFT, within the 0.9-utilization
+    ceiling, monotone in prompt length and in the TTFT budget."""
+    for plen in (4000, 6000):
+        for tp in (2, 4, 8):
+            t_exec = perf.prefill_time_s(plen, tp)
+            ttft_ms = 4.0 * t_exec * 1e3
+            rps = perf.max_prefill_rps(plen, tp, ttft_ms)
+            assert rps > 0.0
+            assert rps * t_exec <= 0.9 + 1e-6  # utilization ceiling
+            # an infeasible budget (tighter than one execution) serves 0
+            assert perf.max_prefill_rps(plen, tp, t_exec * 1e3 * 0.5) == 0.0
+    assert perf.max_prefill_rps(4000, 4, 500.0) > perf.max_prefill_rps(
+        6000, 4, 500.0
+    )
+    assert perf.max_prefill_rps(6000, 4, 800.0) >= perf.max_prefill_rps(
+        6000, 4, 500.0
+    )
+
+
+@pytest.mark.slow
+def test_initial_layout_prefill_capacity_matches_static(perf):
+    """On a 4-6k-prompt trace the nitsum initial layout's estimated
+    prefill capacity must match the static baseline's (the pre-fix 512-
+    chip layout under-provisioned prefill ~5x and never recovered)."""
+    wl = make_workload(
+        "prefill_heavy_probe", "strict", mean_rps=40.0, prompt_mean=4500,
+        output_mean=80, horizon_s=60.0, seed=0, prompt_sigma=0.3,
+    )
+    tiers_long = derive_tiers(perf, prompt_len=4500, ctx_len=4600)
+    sim_n, _ = run_system("nitsum", perf, tiers_long, 128, wl)
+    sim_s, _ = run_system("sglang", perf, tiers_long, 128, wl)
+    pol = sim_n.policy
+    demands = pol._live_demands(sim_n)
+    thp_n = sum(
+        thp for thp, _ in
+        pol._tier_caps(sim_n, [g.spec for g in sim_n.groups], demands).values()
+    )
+    thp_s = sum(
+        thp for thp, _ in
+        pol._tier_caps(sim_n, [g.spec for g in sim_s.groups], demands).values()
+    )
+    assert thp_n >= 0.9 * thp_s
+    # and the realized contest agrees (goodput no worse than static)
+    assert sim_n.result(wl.horizon_s).goodput >= 0.95 * sim_s.result(
+        wl.horizon_s
+    ).goodput

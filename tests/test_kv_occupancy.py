@@ -152,6 +152,55 @@ def test_sliding_window_models_clamp_occupancy():
     assert sim.result(wl.horizon_s).spill_total == 0, sim.spill_counts
 
 
+def test_sliding_window_clamps_generation_growth():
+    """Satellite regression: generation growth is ALSO window-clamped —
+    a sequence whose prompt already fills the sliding window adds zero
+    resident KV per generated token, so long-OUTPUT swa traces must not
+    creep occupancy past the watermark (the old accounting charged every
+    generated token unclamped, a documented conservative error that
+    spuriously tripped the spill path). Conservation (kv_audit) must hold
+    under the clamped charges."""
+    from repro.traces.workload import make_workload
+
+    perf_swa = PerfModel(get_config("gemma2-2b"))
+    win = perf_swa.cfg.attn.window
+    assert win  # the premise of the test
+    # prompts at the window edge + outputs far beyond it: every generated
+    # token would be charged unclamped by the old rule
+    wl = make_workload(
+        "swa_longout", "relaxed", mean_rps=4.0, prompt_mean=win,
+        output_mean=2000, horizon_s=45.0, seed=0,
+        prompt_sigma=0.2, output_sigma=0.2,
+    )
+    tl = derive_tiers(perf_swa, prompt_len=win, ctx_len=win + 2000)
+    sim, _ = run_system("sglang", perf_swa, tl, 16, wl, kv_audit=True)
+    assert sim.result(wl.horizon_s).spill_total == 0, sim.spill_counts
+    # live per-sequence charges never exceed the window
+    for g in sim.groups:
+        if g.kv_seqs:
+            assert g.kv_tokens <= g.kv_seqs * win + 1e-6
+
+
+def test_decode_batch_window_charge_clamps():
+    """DecodeBatch.window_charge: sequences at the window contribute 0,
+    sequences below it the full gain, crossers only the part below."""
+    db = DecodeBatch(cap=8)
+    win = 1000.0
+    # (prompt, tokens): below window / at window / crossing during gain
+    for rid, (prompt, toks) in enumerate(
+        [(100, 10.0), (1200, 300.0), (980, 15.0)]
+    ):
+        r = _req(prompt=prompt, out=4096, rid=rid)
+        r.tokens = toks
+        db.add(r)
+    g = 10.0
+    # seq0: 110 -> 120, +10; seq1: clamp(1200)=1000 + 300 = 1300 >= win,
+    # +0; seq2: 995 -> clamp(1005) = 1000, +5
+    assert db.window_charge(g, db.batch_len, win) == pytest.approx(15.0)
+    # no window: every sequence charges the full gain
+    assert db.window_charge(g, db.batch_len, float("inf")) == pytest.approx(30.0)
+
+
 def test_nitsum_kv_routing_beats_static_on_long_context(perf, tiers_long):
     """Nitsum's KV-aware feasibility routing (GroupHandle.kv_free_frac)
     spreads long-context load before groups hit the watermark: it must

@@ -31,7 +31,8 @@ from repro.profiles.slo import derive_tiers  # noqa: E402
 CELL_KEYS = {
     "system", "scenario", "n_chips", "horizon_s", "engine", "slo",
     "requests", "injected_rps", "goodput", "per_tier_goodput", "spills",
-    "spill_total", "reconfig_count", "finished", "wall_s", "trajectory",
+    "spill_total", "reconfig_count", "switch_considered", "finished",
+    "wall_s", "trajectory",
 }
 
 
@@ -166,3 +167,62 @@ def test_registered_in_benchmark_harness():
     from benchmarks.run import MODULES
 
     assert "scenario_matrix" in MODULES
+
+
+def _gate_payload(cells):
+    scenarios = sorted({k.split("/")[0] for k in cells})
+    return {
+        "n_chips": 64,
+        "scenarios": scenarios,
+        "cells": {k: {"goodput": v} for k, v in cells.items()},
+    }
+
+
+def test_length_regime_gate_logic():
+    """The CI gate (repro.testing.length_regime_gate): length regimes get
+    a 1.3x allowance against static, MIX scenarios must be won outright;
+    missing cells are skipped, not failed."""
+    from repro.testing.length_regime_gate import gate_violations
+
+    # all within bounds: decode_heavy inside 1.3x, MIX won
+    ok = _gate_payload({
+        "decode_heavy/nitsum": 40.0, "decode_heavy/sglang": 50.0,
+        "diurnal/nitsum": 88.0, "diurnal/sglang": 64.0,
+    })
+    assert gate_violations(ok) == []
+    # length regime outside the 1.3x bound
+    bad_len = _gate_payload({
+        "prefill_heavy/nitsum": 33.0, "prefill_heavy/sglang": 162.0,
+    })
+    assert any("1.3x" in v for v in gate_violations(bad_len))
+    # a lost MIX scenario fails even inside 1.3x
+    bad_mix = _gate_payload({
+        "flash_crowd/nitsum": 60.0, "flash_crowd/sglang": 66.0,
+    })
+    assert any("MIX" in v for v in gate_violations(bad_mix))
+    # one-sided cells are skipped
+    partial = _gate_payload({"decode_heavy/nitsum": 1.0})
+    assert gate_violations(partial) == []
+
+
+@pytest.mark.slow
+def test_tier_drift_calibration_assertion_fires():
+    """run_matrix raises when the tier_drift nitsum cell executes zero
+    switches at a full-length horizon (too-sticky hysteresis guard)."""
+    from benchmarks import scenario_matrix as sm
+
+    perf = PerfModel(get_config("llama3-8b"))
+    orig = sm.run_cell
+
+    def zeroed(*a, **kw):
+        cell = orig(*a, **kw)
+        cell["switch_considered"] = 0
+        cell["reconfig_count"] = 0
+        return cell
+
+    sm.run_cell, run_cell_saved = zeroed, sm.run_cell
+    try:
+        with pytest.raises(AssertionError, match="hysteresis calibration"):
+            sm.run_matrix({64: (300.0, ("tier_drift",))}, perf=perf)
+    finally:
+        sm.run_cell = run_cell_saved
