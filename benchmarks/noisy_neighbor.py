@@ -1,0 +1,210 @@
+"""Noisy-neighbor isolation frontier (docs/tenancy.md, ROADMAP item 4).
+
+One aggressor tenant ("mallory") floods the strict tier at ``flood_x``
+times its contracted token budget while two victim tenants stay under
+theirs. Three legs on the same seeded scenario:
+
+* ``baseline`` — the aggressor-free trace (victims only; the aggressor
+  stream is last in the spec, so dropping it leaves every victim's
+  seeded draws untouched) with admission on: the reference for what the
+  victims are entitled to.
+* ``isolated`` — full trace, token-budget admission on. **This is the
+  acceptance gate**: each victim's goodput must hold within
+  ``VICTIM_TOL`` of its baseline, the aggressor's throttle/retry
+  counters must be nonzero, and victims must be (approximately) never
+  throttled. Violations raise AssertionError so CI fails loudly.
+* ``unprotected`` — full trace, no admission: the contrast leg showing
+  what the flood does to the shared pool when nothing meters it.
+
+CI override (NOISY_CHIPS / NOISY_HORIZON / NOISY_FLOOD, mirroring the
+FLEET_*/FAULT_MATRIX_* contract: bad values raise ValueError): resizes
+the full-mode run and lands in ``noisy_neighbor_env.json`` so committed
+full-run evidence is never clobbered. Quick mode writes
+``noisy_neighbor_quick.json``.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import replace
+from typing import Dict, List, Optional
+
+from benchmarks.common import CANDIDATE_TPS, N_CHIPS, Row, perf_model, save_json, tiers
+from repro.serving.admission import AdmissionController, budgets_from_spec
+from repro.serving.simulator import run_system
+from repro.traces.scenarios import noisy_neighbor_spec
+
+REFERENCE_CHIPS = 16  # the pool the scenario's base rates are sized for
+VICTIM_TOL = 0.05  # victims hold within 5% of the aggressor-free baseline
+# a victim may eat a stray throttle on an extreme burst; more than this
+# fraction of its arrivals means the budget is mis-sized, not noise
+VICTIM_THROTTLE_FRAC = 0.005
+
+FULL = dict(chips=N_CHIPS, horizon=600.0, flood=5.0)
+QUICK = dict(chips=N_CHIPS, horizon=120.0, flood=5.0)
+
+
+def _env_cfg() -> Optional[Dict]:
+    """NOISY_CHIPS=32 NOISY_HORIZON=300 NOISY_FLOOD=8 resizes the
+    full-mode legs (bad values raise ValueError so run.py records the
+    failure instead of silently skipping)."""
+    chips = os.environ.get("NOISY_CHIPS")
+    horizon = os.environ.get("NOISY_HORIZON")
+    flood = os.environ.get("NOISY_FLOOD")
+    if not (chips or horizon or flood):
+        return None
+    cfg = dict(FULL)
+    if chips:
+        cfg["chips"] = int(chips)
+        if cfg["chips"] < 2 or cfg["chips"] % 2:
+            raise ValueError(
+                f"NOISY_CHIPS must be a positive even chip count "
+                f"(TP-2 groups), got {chips}"
+            )
+    if horizon:
+        cfg["horizon"] = float(horizon)
+        if cfg["horizon"] <= 0:
+            raise ValueError(f"NOISY_HORIZON must be > 0, got {horizon}")
+    if flood:
+        cfg["flood"] = float(flood)
+        if cfg["flood"] < 1.0:
+            raise ValueError(f"NOISY_FLOOD must be >= 1, got {flood}")
+    return cfg
+
+
+def _leg(system, perf, ts, spec, wl, chips, horizon_s, admission) -> Dict:
+    t0 = time.perf_counter()
+    sim, _ = run_system(
+        system, perf, ts, chips, wl,
+        candidate_tps=CANDIDATE_TPS, admission=admission,
+    )
+    wall = time.perf_counter() - t0
+    res = sim.result(horizon_s)
+    return {
+        "requests": len(wl.requests),
+        "goodput": res.goodput,
+        "per_tier_goodput": res.per_tier_goodput,
+        "tenant_goodput": res.tenant_goodput,
+        "tenant_throttled": res.tenant_throttled,
+        "tenant_retries": res.tenant_retries,
+        "tenant_demoted": res.tenant_demoted,
+        "finished": res.finished,
+        "wall_s": wall,
+    }
+
+
+def isolation_legs(
+    perf, ts, chips: int, horizon_s: float, flood_x: float, seed: int = 0
+) -> Dict[str, Dict]:
+    spec = noisy_neighbor_spec(flood_x=flood_x)
+    rps_scale = chips / REFERENCE_CHIPS
+    aggressor = spec.streams[-1].tenant
+    victims = sorted({s.tenant for s in spec.streams[:-1]})
+    # budgets scale with the trace: a bigger pool carries proportionally
+    # bigger contracts (fresh controller per leg — buckets are stateful)
+    mk_adm = lambda: AdmissionController(
+        budgets_from_spec(spec.scaled(rps_scale))
+    )
+
+    base_spec = replace(
+        spec, name="noisy_neighbor_baseline", streams=spec.streams[:-1]
+    )
+    wl_base = base_spec.build(seed=seed, horizon_s=horizon_s, rps_scale=rps_scale)
+    wl_full = spec.build(seed=seed, horizon_s=horizon_s, rps_scale=rps_scale)
+
+    baseline = _leg("nitsum", perf, ts, base_spec, wl_base, chips, horizon_s,
+                    mk_adm())
+    isolated = _leg("nitsum", perf, ts, spec, wl_full, chips, horizon_s,
+                    mk_adm())
+    unprotected = _leg("nitsum", perf, ts, spec, wl_full, chips, horizon_s,
+                       None)
+
+    # ---- the isolation gate (ISSUE/ROADMAP acceptance bar) ----
+    worst = 0.0
+    for v in victims:
+        ref = baseline["tenant_goodput"].get(v, 0.0)
+        got = isolated["tenant_goodput"].get(v, 0.0)
+        drop = (ref - got) / max(ref, 1e-9)
+        worst = max(worst, drop)
+        if drop > VICTIM_TOL:
+            raise AssertionError(
+                f"isolation gate: victim {v!r} goodput {got:.3f} fell "
+                f"{drop:.1%} below its aggressor-free baseline {ref:.3f} "
+                f"(> {VICTIM_TOL:.0%}) with the aggressor at {flood_x:g}x "
+                f"budget"
+            )
+    if not isolated["tenant_throttled"].get(aggressor, 0):
+        raise AssertionError(
+            f"isolation gate: aggressor {aggressor!r} flooding at "
+            f"{flood_x:g}x budget was never throttled"
+        )
+    if not isolated["tenant_retries"].get(aggressor, 0):
+        raise AssertionError(
+            f"isolation gate: aggressor {aggressor!r} was throttled but "
+            "never retried (delay-and-retry path dead)"
+        )
+    for v in victims:
+        thr = isolated["tenant_throttled"].get(v, 0)
+        n_v = sum(
+            1 for r in wl_full.requests if r.tenant_id == v
+        )
+        if thr > VICTIM_THROTTLE_FRAC * n_v:
+            raise AssertionError(
+                f"isolation gate: victim {v!r} throttled {thr} times "
+                f"({thr / max(n_v, 1):.2%} of its arrivals) — budgets "
+                "are supposed to meter the aggressor, not the victims"
+            )
+    isolated["worst_victim_drop"] = worst
+    return {
+        "chips": chips,
+        "horizon_s": horizon_s,
+        "flood_x": flood_x,
+        "aggressor": aggressor,
+        "victims": victims,
+        "baseline": baseline,
+        "isolated": isolated,
+        "unprotected": unprotected,
+    }
+
+
+def run(quick: bool = False) -> List[Row]:
+    env = _env_cfg()
+    cfg = env if env is not None else (QUICK if quick else FULL)
+    perf = perf_model()
+    ts = tiers(perf)
+    legs = isolation_legs(
+        perf, ts, chips=cfg["chips"], horizon_s=cfg["horizon"],
+        flood_x=cfg["flood"],
+    )
+    if quick:
+        save_json("noisy_neighbor_quick", legs)
+    else:
+        save_json("noisy_neighbor" + ("_env" if env is not None else ""), legs)
+    iso, base, unp = legs["isolated"], legs["baseline"], legs["unprotected"]
+    agg = legs["aggressor"]
+    victim_base = sum(base["tenant_goodput"].get(v, 0.0) for v in legs["victims"])
+    victim_iso = sum(iso["tenant_goodput"].get(v, 0.0) for v in legs["victims"])
+    victim_unp = sum(unp["tenant_goodput"].get(v, 0.0) for v in legs["victims"])
+    return [
+        Row(
+            "noisy.victim_isolation",
+            iso["worst_victim_drop"] * 1e6,
+            f"victims {victim_iso:.1f} vs baseline {victim_base:.1f} req/s "
+            f"(worst drop {iso['worst_victim_drop']:.1%}, gate "
+            f"{VICTIM_TOL:.0%}) at {legs['flood_x']:g}x flood",
+        ),
+        Row(
+            "noisy.aggressor_throttled",
+            iso["wall_s"] * 1e6,
+            f"{agg}: throttled={iso['tenant_throttled'].get(agg, 0)} "
+            f"retries={iso['tenant_retries'].get(agg, 0)} "
+            f"demoted={iso['tenant_demoted'].get(agg, 0)}",
+        ),
+        Row(
+            "noisy.unprotected_contrast",
+            unp["wall_s"] * 1e6,
+            f"victims {victim_unp:.1f} req/s without admission vs "
+            f"{victim_iso:.1f} gated (aggressor unmetered at "
+            f"{unp['tenant_goodput'].get(agg, 0.0):.1f} req/s)",
+        ),
+    ]

@@ -29,6 +29,7 @@ MODULES = [
     "fig16_17_sensitivity",
     "sched_throughput",
     "fleet_throughput",
+    "noisy_neighbor",
     "sim_throughput",
     "kv_backpressure",
     "scenario_matrix",

@@ -37,6 +37,7 @@ class RequestRecord:
     first_token_s: Optional[float] = None
     finish_s: Optional[float] = None
     tokens_out: int = 0
+    tenant_id: str = "default"
 
     @property
     def ttft_ms(self) -> Optional[float]:
@@ -95,6 +96,14 @@ class GoodputMeter:
         for r in self.records:
             if self.meets_slo(r):
                 out[r.tier] += 1
+        return {t: n / max(horizon_s, 1e-9) for t, n in out.items()}
+
+    def per_tenant_goodput(self, horizon_s: float) -> Dict[str, float]:
+        out: Dict[str, int] = {}
+        for r in self.records:
+            out.setdefault(r.tenant_id, 0)
+            if self.meets_slo(r):
+                out[r.tenant_id] += 1
         return {t: n / max(horizon_s, 1e-9) for t, n in out.items()}
 
     def latency_percentiles(self, tier: str, q=(50, 90, 99)) -> dict:

@@ -34,7 +34,11 @@ import numpy as np
 
 from repro.core.goodput import GoodputMeter, SLOTier
 from repro.profiles.perf_model import PerfModel
-from repro.serving.global_scheduler import GlobalScheduler, GroupHandle
+from repro.serving.global_scheduler import (
+    GlobalScheduler,
+    GroupHandle,
+    tenant_key,
+)
 from repro.serving.simulator import (
     Simulator,
     SimReq,
@@ -59,6 +63,14 @@ class FleetResult:
     # per-tier count of spills resolved by handing the request to another
     # cell (the `cross_cell` bucket the intra-cell counters don't see)
     cross_cell_spills: Dict[str, int] = field(default_factory=dict)
+    # per-tier count of *bandwidth*-infeasible dispatches rescued by a
+    # sibling cell with SLO headroom (KV pressure is counted above)
+    cross_cell_bw_spills: Dict[str, int] = field(default_factory=dict)
+    # fleet-wide per-tenant rollups (docs/tenancy.md)
+    tenant_goodput: Dict[str, float] = field(default_factory=dict)
+    tenant_throttled: Dict[str, int] = field(default_factory=dict)
+    tenant_retries: Dict[str, int] = field(default_factory=dict)
+    tenant_demoted: Dict[str, int] = field(default_factory=dict)
     finished: int = 0
     reconfig_count: int = 0
     switch_considered: int = 0
@@ -90,7 +102,8 @@ class FleetSimulator:
         self.seed = seed
         self.now = 0.0
         self.cross_cell_spills: Dict[str, int] = {}
-        self._spilling = False  # re-entrancy guard for _take_spill
+        self.cross_cell_bw_spills: Dict[str, int] = {}
+        self._spilling = False  # re-entrancy guard for cross-cell spills
         # admitted-share balancing state (see _pick_cell)
         self._load = [0.0] * len(self.cells)
         self._rot = int(np.random.RandomState(seed).randint(len(self.cells)))
@@ -185,6 +198,60 @@ class FleetSimulator:
             self._spilling = False
         return True
 
+    def _take_bw_spill(self, victim: Simulator, req: SimReq) -> bool:
+        """Bandwidth analogue of :meth:`_take_spill` (ROADMAP item 2's
+        follow-on): a cell whose dispatch came back SLO-infeasible offers
+        the request to the sibling cell with the most spare SLO-compliant
+        bandwidth on a compatible prefill group, *before* serving it as
+        best-effort. The victim's infeasible dispatch committed no
+        bandwidth, so nothing transfers — the target cell's own route()
+        takes a fresh commitment."""
+        if self._spilling or len(self.cells) == 1:
+            return False
+        rate_cost = 1.0  # matches the policies' uniform dispatch cost
+        tier = req.tr.tier
+        best, best_avail = None, 0.0
+        for cell in self.cells:
+            if cell is victim:
+                continue
+            pol = cell.policy
+            cell.now = self.now
+            sync = getattr(pol, "_sync_scheduler", None)
+            if sync is not None:
+                sync(cell)  # headroom read from a fresh handle snapshot
+            # gs only exists after the first sync — read it *after*, so a
+            # sibling that has not dispatched anything yet still counts
+            gs = getattr(pol, "gs", None)
+            if gs is None:
+                continue
+            avail = 0.0
+            for h in gs.groups.values():
+                if not h.alive or h.stage not in ("prefill", "mixed"):
+                    continue
+                if h.tier not in (None, tier):
+                    continue
+                if h.available_rps > avail:
+                    avail = h.available_rps
+            if avail >= rate_cost and avail > best_avail:
+                best, best_avail = cell, avail
+        if best is None:
+            return False
+        # drop the victim's stale pick (its gid is meaningless in the
+        # target cell's scheduler); route() there re-labels feasibility
+        req.dispatch_gid = None
+        req.rate_cost = 0.0
+        req.feasible = True
+        self.cross_cell_bw_spills[tier] = (
+            self.cross_cell_bw_spills.get(tier, 0) + 1
+        )
+        self._spilling = True
+        try:
+            best.now = self.now
+            best._admit_transfer(req)
+        finally:
+            self._spilling = False
+        return True
+
     # ---- fleet clock -----------------------------------------------------
     def run(self, workload: Workload, drain_s: float = 60.0) -> GoodputMeter:
         cells = self.cells
@@ -240,6 +307,10 @@ class FleetSimulator:
         per_tier: Dict[str, float] = {}
         spills: Dict[str, int] = {}
         merged: Dict[float, float] = {}
+        tenant_goodput: Dict[str, float] = {}
+        tenant_throttled: Dict[str, int] = {}
+        tenant_retries: Dict[str, int] = {}
+        tenant_demoted: Dict[str, int] = {}
         for r in cr:
             for tier, v in r.per_tier_goodput.items():
                 per_tier[tier] = per_tier.get(tier, 0.0) + v
@@ -247,6 +318,15 @@ class FleetSimulator:
                 spills[tier] = spills.get(tier, 0) + v
             for t, v in r.timeline:
                 merged[t] = merged.get(t, 0.0) + v
+            for ten, v in r.tenant_goodput.items():
+                tenant_goodput[ten] = tenant_goodput.get(ten, 0.0) + v
+            for acc, src in (
+                (tenant_throttled, r.tenant_throttled),
+                (tenant_retries, r.tenant_retries),
+                (tenant_demoted, r.tenant_demoted),
+            ):
+                for ten, v in src.items():
+                    acc[ten] = acc.get(ten, 0) + v
         return FleetResult(
             policy=cr[0].policy,
             n_cells=len(cr),
@@ -254,6 +334,11 @@ class FleetSimulator:
             per_tier_goodput=per_tier,
             spills=spills,
             cross_cell_spills=dict(self.cross_cell_spills),
+            cross_cell_bw_spills=dict(self.cross_cell_bw_spills),
+            tenant_goodput=tenant_goodput,
+            tenant_throttled=tenant_throttled,
+            tenant_retries=tenant_retries,
+            tenant_demoted=tenant_demoted,
             finished=sum(r.finished for r in cr),
             reconfig_count=sum(r.reconfig_count for r in cr),
             switch_considered=sum(r.switch_considered for r in cr),
@@ -274,10 +359,14 @@ def run_fleet(
     drain_s: float = 60.0,
     kv_watermark: float = 0.9,
     kv_audit: bool = False,
+    admission=None,
     **policy_kw,
 ) -> Tuple[FleetSimulator, GoodputMeter]:
     """Build an ``n_cells`` x ``chips_per_cell`` fleet (fresh policy per
-    cell) and replay ``workload`` through it. Mirrors ``run_system``."""
+    cell) and replay ``workload`` through it. Mirrors ``run_system``.
+    ``admission`` is ONE shared controller across every cell: token
+    budgets are fleet-global, so a tenant cannot dodge its quota by
+    landing on a different cell."""
     cells = [
         Simulator(
             perf, tiers, chips_per_cell,
@@ -286,6 +375,7 @@ def run_fleet(
                 candidate_tps=candidate_tps, **policy_kw,
             ),
             kv_watermark=kv_watermark, kv_audit=kv_audit,
+            admission=admission,
         )
         for _ in range(n_cells)
     ]
@@ -298,13 +388,16 @@ class FleetScheduler:
     """Handle-level admission tier over per-cell schedulers — the
     control-plane fast path, with no simulator behind it.
 
-    Assignment is a seeded multiplicative hash of the request id (a
-    tenant-key stand-in): stateless, deterministic, and O(1) per request
-    regardless of fleet size. Each cell's scheduler (plain or sharded)
-    then batch-dispatches its slice with KV-aware, tier-aware scoring.
-    When a cell's pick comes back infeasible the request is retried once
-    on the hash-neighbor cell — the batch analogue of cross-cell spill —
-    before being accepted as best-effort.
+    Assignment is a seeded multiplicative hash of the request's
+    tenant key (``tenant_key``: the real tenant id for named tenants —
+    sticky, so one tenant's flood stays one cell's problem — and the
+    request id for the default tenant, preserving per-request spread):
+    stateless, deterministic, and O(1) per request regardless of fleet
+    size. Each cell's scheduler (plain or sharded) then batch-dispatches
+    its slice with KV-aware, tier-aware scoring. When a cell's pick comes
+    back infeasible the request is retried once on the hash-neighbor
+    cell — the batch analogue of cross-cell spill — before being
+    accepted as best-effort.
     """
 
     def __init__(
@@ -316,8 +409,16 @@ class FleetScheduler:
         self.seed = seed
         self.cross_cell = 0  # infeasible picks retried on a sibling cell
 
-    def cell_of(self, req_ids: np.ndarray) -> np.ndarray:
-        h = (req_ids.astype(np.int64) + self.seed) * _KNUTH
+    def cell_of(
+        self, req_ids: np.ndarray, tenants: Optional[Sequence[str]] = None
+    ) -> np.ndarray:
+        keys = req_ids.astype(np.int64)
+        if tenants is not None:
+            keys = np.asarray(
+                [tenant_key(t, int(r)) for t, r in zip(tenants, req_ids)],
+                dtype=np.int64,
+            )
+        h = (keys + self.seed) * _KNUTH
         return (h & 0xFFFFFFFF) % len(self.cells)
 
     def dispatch_batch(
@@ -327,9 +428,15 @@ class FleetScheduler:
         backgrounds: Sequence[bool],
         req_ids: np.ndarray,
         now: Optional[float] = None,
+        tenants: Optional[Sequence[str]] = None,
     ) -> List[Tuple[GroupHandle, bool]]:
         n_cells = len(self.cells)
-        cell_idx = self.cell_of(np.asarray(req_ids))
+        req_ids = np.asarray(req_ids)
+        cell_idx = self.cell_of(req_ids, tenants)
+        if tenants is not None:
+            keys = [tenant_key(t, int(r)) for t, r in zip(tenants, req_ids)]
+        else:
+            keys = [int(r) for r in req_ids]
         out: List[Optional[Tuple[GroupHandle, bool]]] = [None] * len(tiers)
         retry: List[Tuple[int, int]] = []  # (item index, next cell)
         for ci in range(n_cells):
@@ -338,7 +445,7 @@ class FleetScheduler:
                 continue
             items = [(tiers[i], rate_costs[i], backgrounds[i]) for i in sub]
             picks = self.cells[ci].dispatch_batch(
-                items, now=now, keys=[int(req_ids[i]) for i in sub]
+                items, now=now, keys=[keys[i] for i in sub]
             )
             for i, pick in zip(sub, picks):
                 if not pick[1] and n_cells > 1 and not backgrounds[i]:
@@ -350,7 +457,7 @@ class FleetScheduler:
             self.cross_cell += 1
             pick = self.cells[ci].dispatch(
                 tiers[i], rate_costs[i], backgrounds[i],
-                now=now, key=int(req_ids[i]),
+                now=now, key=keys[i],
             )
             out[i] = pick
         return out  # type: ignore[return-value]

@@ -30,6 +30,22 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..traces.workload import DEFAULT_TENANT
+
+
+def tenant_key(tenant_id: str, req_id: int) -> int:
+    """Shard/fan-out key for a request (docs/tenancy.md).
+
+    Non-default tenants hash by identity, so one tenant's requests land
+    on one shard (stickiness makes a flood a local problem and keeps the
+    shard's committed-bandwidth view of that tenant exact). The default
+    tenant keys by ``req_id`` — tenant-free workloads keep today's
+    per-request spreading and their recorded goldens byte-identical.
+    """
+    if tenant_id == DEFAULT_TENANT:
+        return int(req_id)
+    return zlib.crc32(tenant_id.encode())
+
 
 @dataclass
 class GroupHandle:

@@ -24,6 +24,7 @@ class Request:
     max_new_tokens: int
     arrival_s: float = 0.0
     background: bool = False
+    tenant_id: str = "default"
 
     state: RequestState = RequestState.QUEUED
     feasible: bool = True  # global scheduler's SLO feasibility label (§3.3.2)

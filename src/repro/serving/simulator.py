@@ -59,6 +59,7 @@ from repro.serving.global_scheduler import (
     GlobalScheduler,
     GroupHandle,
     ShardedScheduler,
+    tenant_key,
 )
 from repro.traces.workload import TraceRequest, Workload
 
@@ -85,6 +86,10 @@ class SimReq:
     group: Optional["Group"] = None
     rate_cost: float = 0.0
     dispatch_gid: Optional[int] = None
+    # admission throttling exhausted its retries: serve best-effort, and
+    # never offer the request to the fleet as a bandwidth spill (budgets
+    # are fleet-global — a different cell has the same bucket)
+    demoted: bool = False
     _penalty: float = 0.0  # transient: reconfig stall charged on migration
 
     @property
@@ -1427,7 +1432,7 @@ class NitsumPolicy(Policy):
         for _ in range(2):
             h, feasible = self.gs.dispatch(
                 req.tr.tier, rate_cost, req.background,
-                now=sim.now, key=req.tr.req_id,
+                now=sim.now, key=tenant_key(req.tr.tenant_id, req.tr.req_id),
             )
             g = sim._by_gid.get(h.gid)
             if g is not None:
@@ -1458,7 +1463,7 @@ class NitsumPolicy(Policy):
         self._sync_scheduler(sim)
         rate_cost = 1.0
         items = [(r.tr.tier, rate_cost, r.background) for r in reqs]
-        keys = [r.tr.req_id for r in reqs]
+        keys = [tenant_key(r.tr.tenant_id, r.tr.req_id) for r in reqs]
         picks = self.gs.dispatch_batch(items, now=sim.now, keys=keys)
         out: List[Group] = []
         for r, (h, feasible) in zip(reqs, picks):
@@ -1561,6 +1566,15 @@ class SimResult:
     tier_timelines: Dict[str, List[Tuple[float, float]]] = field(
         default_factory=dict
     )
+    # ---- per-tenant accounting (docs/tenancy.md) ----
+    # SLO-good req/s per tenant (every tenant seen, even at 0)
+    tenant_goodput: Dict[str, float] = field(default_factory=dict)
+    # arrivals denied at the admission gate (one per denied first attempt)
+    tenant_throttled: Dict[str, int] = field(default_factory=dict)
+    # retry-heap pops (a request throttled twice retries twice)
+    tenant_retries: Dict[str, int] = field(default_factory=dict)
+    # requests demoted to best-effort after exhausting their retries
+    tenant_demoted: Dict[str, int] = field(default_factory=dict)
 
     @property
     def spill_total(self) -> int:
@@ -1588,6 +1602,7 @@ class Simulator:
         kv_audit: bool = False,
         ctx_ewma_tau_s: float = 5.0,
         cap_drift_frac: float = 0.05,
+        admission=None,
     ):
         if engine != "event":
             raise ValueError(
@@ -1663,6 +1678,14 @@ class Simulator:
         }
         self._tier_win_good: Dict[str, int] = {t.name: 0 for t in tiers}
         self._fault_heap: List[tuple] = []  # (t, seq, FaultEvent | end-marker)
+        # per-tenant token-budget admission (docs/tenancy.md): None means
+        # no gate — every admission-path branch below is skipped and the
+        # engine's event trace is bit-identical to the pre-tenant code
+        self.admission = admission
+        self.tenant_throttled: Dict[str, int] = {}
+        self.tenant_retries: Dict[str, int] = {}
+        self.tenant_demoted: Dict[str, int] = {}
+        self._retry_heap: List[tuple] = []  # (t, seq, SimReq, tries)
         # event-engine machinery
         self._heap: List[tuple] = []
         self._seq = count()
@@ -1692,6 +1715,10 @@ class Simulator:
                 self.timeline, self.tier_timelines, self.fault_log, horizon_s
             ),
             tier_timelines={t: list(tl) for t, tl in self.tier_timelines.items()},
+            tenant_goodput=self.meter.per_tenant_goodput(horizon_s),
+            tenant_throttled=dict(self.tenant_throttled),
+            tenant_retries=dict(self.tenant_retries),
+            tenant_demoted=dict(self.tenant_demoted),
         )
 
     def group_by_id(self, gid: int) -> Group:
@@ -1858,7 +1885,7 @@ class Simulator:
         rec = RequestRecord(
             req.tr.req_id, req.tr.tier, req.tr.arrival_s, req.tr.prompt_len,
             req.tr.output_len, req.first_token_s, req.finish_s,
-            int(req.tr.output_len),
+            int(req.tr.output_len), tenant_id=req.tr.tenant_id,
         )
         self.meter.add(rec)
         if self.meter.meets_slo(rec):
@@ -1954,13 +1981,85 @@ class Simulator:
         req.feasible = False  # no headroom anywhere: best-effort spill
         return g
 
+    # ---- per-tenant token-budget admission (docs/tenancy.md) -------------
+    def _admission_gate(self, tr: TraceRequest) -> bool:
+        """Token-budget gate ahead of routing. Admitted → True (and only
+        then does the request count toward the planner's demand stats).
+        Throttled → False: the request is parked on the retry heap with a
+        priced delay (token deficit / refill rate) for delay-and-retry."""
+        if tr.tier in self._bg_tiers:
+            return True  # background work is already residual-capacity-only
+        adm = self.admission
+        cost = tr.prompt_len + tr.output_len
+        if adm.try_admit(tr.tenant_id, cost, self.now):
+            return True
+        t = tr.tenant_id
+        self.tenant_throttled[t] = self.tenant_throttled.get(t, 0) + 1
+        req = SimReq(tr, background=False)
+        delay = adm.retry_delay_s(t, cost, self.now)
+        heapq.heappush(
+            self._retry_heap, (self.now + delay, next(self._seq), req, 1)
+        )
+        return False
+
+    def _retry_admit(self, req: SimReq, tries: int) -> None:
+        """One retry-heap pop: re-offer the request to its tenant's bucket.
+        Admitted → route + place as if it had just arrived (SLO clock kept
+        from the original arrival). Still throttled → re-park, up to the
+        budget's retry bound; then demote to best-effort — the spill
+        path's third option, after delay and before outright service as
+        infeasible work."""
+        adm = self.admission
+        tr = req.tr
+        tenant = tr.tenant_id
+        cost = tr.prompt_len + tr.output_len
+        self.tenant_retries[tenant] = self.tenant_retries.get(tenant, 0) + 1
+        if adm.try_admit(tenant, cost, self.now):
+            self._recent_push(tr)
+            g = self.policy.route(self, req)
+            self._place(req, g)
+            return
+        if tries < adm.max_retries(tenant):
+            delay = adm.retry_delay_s(tenant, cost, self.now)
+            heapq.heappush(
+                self._retry_heap,
+                (self.now + delay, next(self._seq), req, tries + 1),
+            )
+            return
+        # retries exhausted: serve best-effort (sinks in prefill_priority)
+        self.tenant_demoted[tenant] = self.tenant_demoted.get(tenant, 0) + 1
+        self._recent_push(tr)
+        g = self.policy.route(self, req)
+        gs = getattr(self.policy, "gs", None)
+        if gs is not None and req.feasible and req.dispatch_gid is not None:
+            # release the bandwidth the route just committed: a demoted
+            # request must not crowd the tier's SLO budget
+            gs.complete(req.dispatch_gid, req.rate_cost)
+        req.rate_cost = 0.0
+        req.feasible = False
+        req.demoted = True
+        self._place(req, g)
+
     def _admit(self, tr: TraceRequest) -> None:
+        if self.admission is not None and not self._admission_gate(tr):
+            return
         self._recent_push(tr)
         req = SimReq(tr, background=tr.tier in self._bg_tiers)
         g = self.policy.route(self, req)
         self._place(req, g)
 
     def _place(self, req: SimReq, g: Group) -> None:
+        if (
+            not req.feasible
+            and not req.background
+            and not req.demoted
+            and self._fleet is not None
+        ):
+            # bandwidth-infeasible here, but a sibling cell may have SLO
+            # headroom: cross-cell spill before demoting (ROADMAP item 2's
+            # bandwidth follow-on; KV pressure spills below as before)
+            if self._fleet._take_bw_spill(self, req):
+                return
         g = self._kv_backpressure(req, g)
         if g is None:
             return  # cross-cell spill: another cell admitted the request
@@ -1986,6 +2085,10 @@ class Simulator:
             for tr in batch:
                 self._admit(tr)
             return
+        if self.admission is not None:
+            batch = [tr for tr in batch if self._admission_gate(tr)]
+            if not batch:
+                return
         reqs = []
         for tr in batch:
             self._recent_push(tr)
@@ -2271,6 +2374,7 @@ class Simulator:
         self._next_second = 1.0
         self._heap = []
         self._fault_heap = []
+        self._retry_heap = []
         for ev in workload.faults:
             heapq.heappush(self._fault_heap, (ev.t_s, next(self._seq), ev))
         for g in self.groups:
@@ -2282,6 +2386,8 @@ class Simulator:
         t = self._peek_group_event()
         if self._arr_i < len(self._adm):
             t = min(t, self._adm[self._arr_i])
+        if self._retry_heap:
+            t = min(t, self._retry_heap[0][0])
         if self._fault_heap:
             t = min(t, self._fault_heap[0][0])
         return min(t, self._next_window, self._next_second)
@@ -2298,6 +2404,10 @@ class Simulator:
                 j += 1
             self._arr_i = j
             self._admit_batch(self._arr[i:j])
+        retries = self._retry_heap
+        while retries and retries[0][0] <= t:
+            _, _, req, tries = heapq.heappop(retries)
+            self._retry_admit(req, tries)
         faults = self._fault_heap
         while faults and faults[0][0] <= t:
             _, _, action = heapq.heappop(faults)
@@ -2381,6 +2491,7 @@ def run_system(
     engine: str = "event",
     kv_watermark: float = 0.9,
     kv_audit: bool = False,
+    admission=None,
     **policy_kw,
 ):
     policy = make_policy(
@@ -2388,7 +2499,7 @@ def run_system(
     )
     sim = Simulator(
         perf, tiers, n_chips, policy, engine=engine,
-        kv_watermark=kv_watermark, kv_audit=kv_audit,
+        kv_watermark=kv_watermark, kv_audit=kv_audit, admission=admission,
     )
     meter = sim.run(workload)
     return sim, meter

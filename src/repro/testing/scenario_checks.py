@@ -92,7 +92,8 @@ def check_determinism(
     a = spec.build(seed=seed, horizon_s=horizon_s, rps_scale=rps_scale)
     b = spec.build(seed=seed, horizon_s=horizon_s, rps_scale=rps_scale)
     key = lambda wl: [
-        (r.req_id, r.tier, r.arrival_s, r.prompt_len, r.output_len)
+        (r.req_id, r.tier, r.arrival_s, r.prompt_len, r.output_len,
+         r.tenant_id)
         for r in wl.requests
     ]
     assert key(a) == key(b), f"{spec.name}: same seed produced different traces"

@@ -32,6 +32,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 from repro.configs import get_config
 from repro.profiles.perf_model import PerfModel, clear_perf_caches
 from repro.profiles.slo import derive_tiers
+from repro.serving.admission import AdmissionController, budgets_from_spec
 from repro.serving.simulator import SimResult, run_system
 from repro.traces.scenarios import FAULT_SCENARIOS, get_scenario
 from repro.traces.servegen import servegen_longctx, servegen_two_tier
@@ -105,6 +106,27 @@ def _case_library() -> Dict[str, Callable[[], dict]]:
                     seed=0, horizon_s=180.0
                 ),
             )
+    # multi-tenant cases (docs/tenancy.md): gated WITH token-budget
+    # admission (throttle/retry path) and open (tenant identity threads
+    # through routing/metrics but nothing throttles). Existing cases stay
+    # byte-identical — tenant fields only enter the summary when present.
+    add(
+        "noisy_neighbor/nitsum", fast=True, system="nitsum",
+        tiers_kw=_SHORT_TIERS,
+        mk_workload=lambda: get_scenario("noisy_neighbor").build(
+            seed=0, horizon_s=90.0
+        ),
+        mk_admission=lambda: AdmissionController(
+            budgets_from_spec(get_scenario("noisy_neighbor"))
+        ),
+    )
+    add(
+        "noisy_neighbor_open/nitsum", fast=False, system="nitsum",
+        tiers_kw=_SHORT_TIERS,
+        mk_workload=lambda: get_scenario("noisy_neighbor").build(
+            seed=0, horizon_s=90.0
+        ),
+    )
     return cases
 
 
@@ -119,7 +141,7 @@ def summarize(res: SimResult) -> dict:
     """The recorded per-case statistics. Everything here is deterministic
     under fixed seeds; floats are rounded so the committed json is stable
     across platforms at well below the check tolerance."""
-    return {
+    out = {
         "policy": res.policy,
         "goodput": round(res.goodput, 4),
         "per_tier_goodput": {
@@ -131,6 +153,17 @@ def summarize(res: SimResult) -> dict:
         "fault_restart_total": res.fault_restart_total,
         "fault_count": len(res.fault_timeline),
     }
+    # tenant block only for genuinely multi-tenant (or throttled) replays:
+    # single-default-tenant cases keep their committed goldens byte-identical
+    named = {t for t in res.tenant_goodput if t != "default"}
+    if named or res.tenant_throttled:
+        out["tenant_goodput"] = {
+            t: round(v, 4) for t, v in sorted(res.tenant_goodput.items())
+        }
+        out["tenant_throttled"] = dict(sorted(res.tenant_throttled.items()))
+        out["tenant_retries"] = dict(sorted(res.tenant_retries.items()))
+        out["tenant_demoted"] = dict(sorted(res.tenant_demoted.items()))
+    return out
 
 
 def run_case(name: str) -> dict:
@@ -139,9 +172,11 @@ def run_case(name: str) -> dict:
     perf = PerfModel(get_config(MODEL))
     tiers = derive_tiers(perf, candidate_tps=(1, 2, 4, 8), **spec["tiers_kw"])
     wl = spec["workload"]
+    mk_adm = spec.get("mk_admission")
     sim, _ = run_system(
         spec["system"], perf, tiers, spec.get("n_chips", N_CHIPS), wl,
         kv_audit=spec.get("kv_audit", False),
+        admission=mk_adm() if mk_adm is not None else None,
     )
     return summarize(sim.result(wl.horizon_s))
 
@@ -190,6 +225,16 @@ def check_case(
         bad.append(
             f"{name}: fault_count {got['fault_count']} != {g['fault_count']}"
         )
+    # tenant gates (only present on multi-tenant cases): per-tenant goodput
+    # within 2·rtol, throttle counts agree on zero-vs-nonzero and within 2x
+    for ten, v in g.get("tenant_goodput", {}).items():
+        if v > 0.5:
+            rel(f"tenant_goodput[{ten}]",
+                got.get("tenant_goodput", {}).get(ten, 0.0), v, tol=2 * rtol)
+    for ten, et in g.get("tenant_throttled", {}).items():
+        gt = got.get("tenant_throttled", {}).get(ten, 0)
+        if (gt == 0) != (et == 0) or (et and not 0.5 <= gt / et <= 2.0):
+            bad.append(f"{name}: tenant_throttled[{ten}] {gt} vs golden {et}")
     return bad
 
 

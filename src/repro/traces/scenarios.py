@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.traces.servegen import STATS as SERVEGEN_STATS
 from repro.traces.workload import (
+    DEFAULT_TENANT,
     FAULT_KINDS,
     FaultEvent,
     Workload,
@@ -116,6 +117,15 @@ class StreamSpec:
     output_hi: int = 4096
     burstiness: float = 0.6
     envelope: EnvelopeSpec = field(default_factory=EnvelopeSpec)
+    # tenant identity (docs/tenancy.md): every request of this stream
+    # belongs to `tenant`; DEFAULT_TENANT keeps legacy single-tenant
+    # behavior (and golden traces) exactly
+    tenant: str = DEFAULT_TENANT
+    # contracted sustained rate for admission budgeting (req/s): what the
+    # tenant *paid for*, as opposed to mean_rps, what it *sends*. None =
+    # no contract — admission.budgets_from_spec leaves the tenant
+    # unlimited. An aggressor floods by sending mean_rps >> budget_rps.
+    budget_rps: Optional[float] = None
 
 
 @dataclass(frozen=True)
@@ -209,6 +219,7 @@ class ScenarioSpec:
                     output_lo=s.output_lo,
                     output_hi=s.output_hi,
                     envelope=s.envelope.values(horizon),
+                    tenant_id=s.tenant,
                 )
             )
         wl = merge_workloads(self.name, *parts)
@@ -403,6 +414,57 @@ def _decode_heavy() -> ScenarioSpec:
 
 
 # ---------------------------------------------------------------------------
+# Noisy-neighbor scenarios (docs/tenancy.md, benchmarks/noisy_neighbor.py):
+# two well-behaved victim tenants under their contracted budgets, plus one
+# aggressor flooding the strict tier at `flood_x` times ITS contract. The
+# isolation acceptance bar: with admission on, victim goodput holds within
+# a few percent of the aggressor-free baseline while the aggressor is
+# throttled. The aggressor stream is deliberately LAST: stream i draws
+# RandomState(seed + i), so dropping the aggressor (`streams[:-1]` — the
+# baseline leg) leaves every victim's arrival/length draws untouched.
+# ---------------------------------------------------------------------------
+_NOISY_HORIZON = 600.0
+
+
+def noisy_neighbor_spec(flood_x: float = 5.0) -> ScenarioSpec:
+    """The noisy-neighbor family at an aggressor flood factor of
+    ``flood_x`` (>= 1; the registered default is 5x — the ISSUE/ROADMAP
+    isolation bar)."""
+    agg_base = _CONV["mean_rps"] * 0.10  # the aggressor's *contract*
+    victims = (
+        StreamSpec(
+            "strict", _CONV["mean_rps"] * 0.70, _CONV["prompt_mean"],
+            _CONV["output_mean"], burstiness=0.6,
+            tenant="tenant_a", budget_rps=_CONV["mean_rps"] * 0.70 * 2.0,
+        ),
+        StreamSpec(
+            "relaxed", _CODE["mean_rps"] * 0.70, _CODE["prompt_mean"],
+            _CODE["output_mean"], burstiness=0.6,
+            tenant="tenant_b", budget_rps=_CODE["mean_rps"] * 0.70 * 2.0,
+        ),
+    )
+    aggressor = StreamSpec(
+        "strict", agg_base * flood_x, _CONV["prompt_mean"],
+        _CONV["output_mean"], burstiness=0.4,
+        tenant="mallory", budget_rps=agg_base,
+    )
+    return ScenarioSpec(
+        name="noisy_neighbor",
+        horizon_s=_NOISY_HORIZON,
+        description=(
+            "Two victim tenants (tenant_a on strict conversation, tenant_b "
+            "on relaxed code, both at 0.70x the two-tier base and under "
+            f"2x-mean contracts) share the pool with 'mallory', flooding "
+            f"the strict tier at {flood_x:g}x its contracted rate. "
+            "Acceptance bar is isolation, not throughput: victim goodput "
+            "within a few percent of the aggressor-free baseline, "
+            "aggressor throttled (docs/tenancy.md)."
+        ),
+        streams=victims + (aggressor,),
+    )
+
+
+# ---------------------------------------------------------------------------
 # Fault scenarios (the incident-matrix rows, benchmarks/fault_matrix.py).
 # The request load is deliberately steady — a flat two-tier base at the
 # 16-chip saturation point — so every goodput dip in the replay is
@@ -523,7 +585,7 @@ _REGISTRY = {
     s.name: s
     for s in (
         _diurnal(), _flash_crowd(), _tier_drift(), _longctx_phases(),
-        _prefill_heavy(), _decode_heavy(),
+        _prefill_heavy(), _decode_heavy(), noisy_neighbor_spec(),
         _fault_chip_loss(), _fault_host_loss(), _fault_kv_loss(),
         _fault_straggler(), _incident_replay(),
     )

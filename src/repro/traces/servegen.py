@@ -111,7 +111,7 @@ def servegen_shifting(
             parts.append(
                 Workload(w.name, [
                     TraceRequest(r.req_id, r.tier, r.arrival_s + ph * phase_s,
-                                 r.prompt_len, r.output_len)
+                                 r.prompt_len, r.output_len, r.tenant_id)
                     for r in w.requests
                 ], horizon_s)
             )

@@ -15,6 +15,13 @@ import numpy as np
 
 FAULT_KINDS = ("chip_loss", "host_loss", "kv_loss", "straggler", "recovery")
 
+# Tenant identity (docs/tenancy.md): every request belongs to a tenant.
+# Tenant-free workloads carry this sentinel, and every tenant-aware layer
+# (admission, shard keying, fleet fan-out) degrades to today's
+# tenant-oblivious behavior when it sees it — recorded goldens stay
+# byte-identical for single-default-tenant traces.
+DEFAULT_TENANT = "default"
+
 
 @dataclass(frozen=True)
 class TraceRequest:
@@ -23,6 +30,7 @@ class TraceRequest:
     arrival_s: float
     prompt_len: int
     output_len: int
+    tenant_id: str = DEFAULT_TENANT
 
 
 @dataclass(frozen=True)
@@ -79,7 +87,8 @@ class Workload:
         sweeps injected RPS) by time-compressing the arrival process."""
         f = self.rps / target_rps
         reqs = [
-            TraceRequest(r.req_id, r.tier, r.arrival_s * f, r.prompt_len, r.output_len)
+            TraceRequest(r.req_id, r.tier, r.arrival_s * f, r.prompt_len,
+                         r.output_len, r.tenant_id)
             for r in self.requests
         ]
         faults = tuple(
@@ -179,6 +188,7 @@ def make_workload(
     output_lo: int = 2,
     output_hi: int = 4096,
     envelope: Optional[np.ndarray] = None,
+    tenant_id: str = DEFAULT_TENANT,
 ) -> Workload:
     rng = np.random.RandomState(seed)
     t = bursty_arrivals(rng, mean_rps, horizon_s, burstiness, envelope=envelope)
@@ -189,7 +199,8 @@ def make_workload(
         rng, output_mean, len(t), sigma=output_sigma, lo=output_lo, hi=output_hi
     )
     reqs = [
-        TraceRequest(req_id_base + i, tier, float(t[i]), int(pl[i]), int(ol[i]))
+        TraceRequest(req_id_base + i, tier, float(t[i]), int(pl[i]), int(ol[i]),
+                     tenant_id)
         for i in range(len(t))
     ]
     return Workload(name, reqs, horizon_s)
@@ -200,7 +211,8 @@ def merge_workloads(name: str, *wls: Workload) -> Workload:
         (r for w in wls for r in w.requests), key=lambda r: r.arrival_s
     )
     reqs = [
-        TraceRequest(i, r.tier, r.arrival_s, r.prompt_len, r.output_len)
+        TraceRequest(i, r.tier, r.arrival_s, r.prompt_len, r.output_len,
+                     r.tenant_id)
         for i, r in enumerate(reqs)
     ]
     faults = tuple(

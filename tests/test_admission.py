@@ -1,0 +1,184 @@
+"""Token-budget admission layer (src/repro/serving/admission.py).
+
+Covers the bucket mechanics (deterministic continuous refill, burst
+allowance), the controller contract (unlimited tenants are free,
+budgeted tenants throttle under flood, retry delays are priced and
+clamped), the delay-and-retry-then-demote path inside the simulator,
+and the golden-parity property the ISSUE pins: for a tenant-free
+workload, an admission layer with no budgets is behaviourally identical
+to no admission layer at all.
+"""
+import math
+
+import pytest
+
+from repro.configs import get_config
+from repro.profiles.perf_model import PerfModel
+from repro.profiles.slo import derive_tiers
+from repro.serving.admission import (
+    AdmissionController,
+    TenantBudget,
+    TokenBucket,
+    budgets_from_spec,
+)
+from repro.serving.simulator import run_system
+from repro.traces.scenarios import StreamSpec, ScenarioSpec, get_scenario
+from repro.traces.servegen import servegen_two_tier
+
+
+@pytest.fixture(scope="module")
+def perf():
+    return PerfModel(get_config("llama3-8b"))
+
+
+@pytest.fixture(scope="module")
+def tiers(perf):
+    return derive_tiers(perf, prompt_len=900, ctx_len=1000)
+
+
+# ---------------------------------------------------------------------------
+# TokenBucket mechanics
+# ---------------------------------------------------------------------------
+
+def test_bucket_starts_full_and_refills_to_cap():
+    b = TokenBucket(rate=100.0, cap=500.0)
+    assert b.try_take(500.0, now=0.0)  # the whole burst, cold
+    assert not b.try_take(1.0, now=0.0)  # empty at t=0
+    assert b.try_take(100.0, now=1.0)  # 1 s of refill covers 100
+    # refill never exceeds cap: after a long idle only `cap` is available
+    assert b.try_take(500.0, now=1e6)
+    assert not b.try_take(1.0, now=1e6)
+
+
+def test_bucket_refill_is_deterministic_in_call_sequence():
+    a, b = TokenBucket(10.0, 100.0), TokenBucket(10.0, 100.0)
+    seq = [(60.0, 0.0), (60.0, 1.5), (30.0, 4.0), (30.0, 4.0), (5.0, 9.25)]
+    assert [a.try_take(c, t) for c, t in seq] == \
+        [b.try_take(c, t) for c, t in seq]
+
+
+def test_bucket_delay_is_priced_by_deficit():
+    b = TokenBucket(rate=50.0, cap=200.0)
+    assert b.delay_for(200.0, now=0.0) == 0.0
+    b.try_take(200.0, now=0.0)
+    # need 100 tokens at 50 tok/s -> 2 s
+    assert b.delay_for(100.0, now=0.0) == pytest.approx(2.0)
+    # a cost above capacity can never be covered
+    assert math.isinf(b.delay_for(201.0, now=0.0))
+
+
+# ---------------------------------------------------------------------------
+# AdmissionController contract
+# ---------------------------------------------------------------------------
+
+def test_unbudgeted_tenants_are_unlimited():
+    adm = AdmissionController({})
+    for _ in range(1000):
+        assert adm.try_admit("default", 1e9, now=0.0)
+    assert adm.max_retries("default") == 0
+    assert adm.retry_delay_s("default", 1e9, now=0.0) == adm.min_retry_s
+
+
+def test_budgeted_tenant_throttles_after_burst():
+    adm = AdmissionController(
+        {"mallory": TenantBudget(tokens_per_s=100.0, burst_tokens=300.0)}
+    )
+    assert adm.try_admit("mallory", 300.0, now=0.0)
+    assert not adm.try_admit("mallory", 50.0, now=0.0)
+    # other tenants are unaffected
+    assert adm.try_admit("alice", 1e9, now=0.0)
+    # the priced delay: 50-token deficit at 100 tok/s = 0.5 s
+    assert adm.retry_delay_s("mallory", 50.0, now=0.0) == pytest.approx(0.5)
+    assert adm.try_admit("mallory", 50.0, now=0.5)
+
+
+def test_retry_delay_clamped_to_bounds():
+    adm = AdmissionController(
+        {"t": TenantBudget(tokens_per_s=1.0, burst_tokens=10.0)},
+        min_retry_s=0.05, max_retry_s=5.0,
+    )
+    adm.try_admit("t", 10.0, now=0.0)
+    # 10-token deficit at 1 tok/s = 10 s, clamped to max
+    assert adm.retry_delay_s("t", 10.0, now=0.0) == 5.0
+    # cost above capacity -> still the (finite) max, never inf
+    assert adm.retry_delay_s("t", 100.0, now=0.0) == 5.0
+    # tiny deficit -> clamped up to min so retries cannot thrash
+    assert adm.retry_delay_s("t", 10.0, now=9.99) == 0.05
+
+
+def test_default_budget_applies_to_unknown_tenants():
+    adm = AdmissionController(
+        {}, default_budget=TenantBudget(10.0, 20.0, max_retries=7)
+    )
+    assert adm.try_admit("anyone", 20.0, now=0.0)
+    assert not adm.try_admit("anyone", 1.0, now=0.0)
+    assert adm.max_retries("anyone") == 7
+
+
+def test_budgets_from_spec_sums_streams_per_tenant():
+    spec = ScenarioSpec(
+        name="x", horizon_s=60.0,
+        streams=(
+            StreamSpec("strict", 2.0, 100, 50, tenant="a", budget_rps=2.0),
+            StreamSpec("relaxed", 1.0, 300, 100, tenant="a", budget_rps=1.0),
+            StreamSpec("strict", 5.0, 100, 50, tenant="free"),  # no budget
+        ),
+    )
+    budgets = budgets_from_spec(spec, headroom=1.0, burst_s=2.0)
+    assert set(budgets) == {"a"}  # unbudgeted streams leave tenants out
+    # 2 rps * 150 tok + 1 rps * 400 tok = 700 tok/s
+    assert budgets["a"].tokens_per_s == pytest.approx(700.0)
+    assert budgets["a"].burst_tokens == pytest.approx(1400.0)
+
+
+# ---------------------------------------------------------------------------
+# Simulator integration: gate, delay-and-retry, demote
+# ---------------------------------------------------------------------------
+
+def test_empty_admission_is_identical_to_none(perf, tiers):
+    """The golden-parity property: a controller with no budgets must not
+    perturb a tenant-free replay in any observable way."""
+    wl = servegen_two_tier(horizon_s=30.0, seed=0)
+    sim_none, _ = run_system("nitsum", perf, tiers, 16, wl)
+    sim_empty, _ = run_system(
+        "nitsum", perf, tiers, 16, wl, admission=AdmissionController({})
+    )
+    a, b = sim_none.result(30.0), sim_empty.result(30.0)
+    assert a.goodput == b.goodput
+    assert a.per_tier_goodput == b.per_tier_goodput
+    assert a.finished == b.finished
+    assert not b.tenant_throttled and not b.tenant_retries
+
+
+def test_flooding_tenant_throttles_retries_then_demotes(perf, tiers):
+    spec = get_scenario("noisy_neighbor")
+    wl = spec.build(seed=0, horizon_s=60.0)
+    adm = AdmissionController(budgets_from_spec(spec))
+    sim, _ = run_system("nitsum", perf, tiers, 16, wl, admission=adm)
+    res = sim.result(60.0)
+    # the aggressor hits every stage of the delay-and-retry path
+    assert res.tenant_throttled.get("mallory", 0) > 0
+    assert res.tenant_retries.get("mallory", 0) > 0
+    assert res.tenant_demoted.get("mallory", 0) > 0
+    # retries are bounded: at most max_retries pops per throttled request
+    assert res.tenant_retries["mallory"] <= \
+        adm.max_retries("mallory") * res.tenant_throttled["mallory"]
+    # victims under their contracts are never throttled
+    assert res.tenant_throttled.get("tenant_a", 0) == 0
+    assert res.tenant_throttled.get("tenant_b", 0) == 0
+    # demoted requests still finish (best-effort, not dropped)
+    assert res.finished > 0.9 * len(wl.requests)
+
+
+def test_gated_replay_is_deterministic(perf, tiers):
+    spec = get_scenario("noisy_neighbor")
+
+    def once():
+        wl = spec.build(seed=0, horizon_s=45.0)
+        adm = AdmissionController(budgets_from_spec(spec))
+        sim, _ = run_system("nitsum", perf, tiers, 16, wl, admission=adm)
+        r = sim.result(45.0)
+        return (r.goodput, r.tenant_goodput, r.tenant_throttled,
+                r.tenant_retries, r.tenant_demoted)
+
+    assert once() == once()

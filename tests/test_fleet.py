@@ -212,3 +212,95 @@ def test_switch_considered_counts_candidate_switches(perf, tiers):
     # window of which counts as considered
     assert res.reconfig_count > 0
     assert res.switch_considered >= 3 * res.reconfig_count
+
+
+def test_cross_cell_bw_spill_reroutes_infeasible_dispatch(perf, tiers):
+    """A cell whose dispatch came back SLO-infeasible (no bandwidth on
+    any compatible group) offers the request to the sibling with spare
+    SLO-compliant bandwidth instead of serving it best-effort locally."""
+    fleet, cells = _mk_cells(perf, tiers, 2)
+    # starve cell 0 of SLO bandwidth: every handle advertises 0 rps
+    # (_sync_ver = None forces the next sync to rebuild its handles
+    # through the patched hook — _begin already built them once)
+    cells[0].policy._handle_max_rps = lambda sim, g: 0.0
+    cells[0].policy._sync_ver = None
+    tr = TraceRequest(req_id=1, tier="strict", arrival_s=0.02,
+                      prompt_len=900, output_len=64)
+    fleet.now = 0.02
+    cells[0].now = 0.02
+    cells[0]._admit(tr)
+
+    assert fleet.cross_cell_bw_spills == {"strict": 1}
+    assert fleet.cross_cell_spills == {}  # this is not the KV path
+
+    def holds(cell):
+        return [
+            r for g in cell.groups
+            for r in list(g.prefill_q) + ([g.cur] if g.cur else [])
+            if r.tr is tr
+        ]
+
+    assert not holds(cells[0])
+    landed = holds(cells[1])
+    # the target cell re-routed it as a fresh feasible dispatch with its
+    # own commitment
+    assert len(landed) == 1 and landed[0].feasible
+    committed1 = sum(
+        h.committed_rps for h in cells[1].policy.gs.groups.values()
+    )
+    assert committed1 > 0.0
+
+
+def test_bw_spill_degrades_to_best_effort_when_no_sibling(perf, tiers):
+    """With every cell bandwidth-starved the request stays best-effort in
+    its own cell — the pre-fleet behavior — and no bw bucket appears."""
+    fleet, cells = _mk_cells(perf, tiers, 2)
+    for c in cells:
+        c.policy._handle_max_rps = lambda sim, g: 0.0
+        c.policy._sync_ver = None
+    tr = TraceRequest(req_id=1, tier="strict", arrival_s=0.02,
+                      prompt_len=900, output_len=64)
+    fleet.now = 0.02
+    cells[0].now = 0.02
+    cells[0]._admit(tr)
+    assert fleet.cross_cell_bw_spills == {}
+    held = [
+        r for g in cells[0].groups
+        for r in list(g.prefill_q) + ([g.cur] if g.cur else [])
+        if r.tr is tr
+    ]
+    assert len(held) == 1 and not held[0].feasible
+
+
+def test_fleet_scheduler_tenant_affinity():
+    """Named tenants shard by tenant identity: every request of a tenant
+    lands on one cell (budget accounting and cache locality follow the
+    tenant), while default-tenant traffic keeps the per-request spread."""
+    import numpy as np
+
+    def mk_cell():
+        return GlobalScheduler([
+            GroupHandle(g, None, "mixed", 2, max_rps=50.0)
+            for g in range(4)
+        ])
+
+    fs = FleetScheduler([mk_cell() for _ in range(4)], seed=0)
+    n = 400
+    req_ids = np.arange(n)
+    tenants = ["tenant_%d" % (i % 3) for i in range(n)]
+    cells_named = fs.cell_of(req_ids, tenants)
+    for t in set(tenants):
+        picked = {
+            int(c) for c, ten in zip(cells_named, tenants) if ten == t
+        }
+        assert len(picked) == 1, (t, picked)
+    # default tenant degrades to the per-request hash: same cells as the
+    # tenant-free call, so existing spread (and parity tests) hold
+    default = fs.cell_of(req_ids, ["default"] * n)
+    assert (default == fs.cell_of(req_ids)).all()
+    # and the front door still routes everything when tenant-keyed
+    picks = fs.dispatch_batch(
+        ["strict"] * n, [0.01] * n, [False] * n, req_ids, now=0.0,
+        tenants=tenants,
+    )
+    assert len(picks) == n and all(p is not None for p in picks)

@@ -197,3 +197,47 @@ def test_custom_spec_composition():
     wl = spec.build(seed=7)
     assert not scenario_violations(spec, wl), scenario_violations(spec, wl)
     assert math.isclose(wl.horizon_s, 240.0)
+
+
+def test_noisy_neighbor_registered_and_tenant_tagged():
+    """The multi-tenant scenario (docs/tenancy.md): registered, victims
+    first / aggressor last (so dropping the last stream leaves every
+    victim's seeded draws untouched), and every realized request carries
+    its stream's tenant."""
+    assert "noisy_neighbor" in ALL
+    spec = get_scenario("noisy_neighbor")
+    assert spec.streams[-1].tenant == "mallory"
+    victims = {s.tenant for s in spec.streams[:-1]}
+    assert victims == {"tenant_a", "tenant_b"}
+    # the aggressor floods: its realized rate is a multiple of its contract
+    agg = spec.streams[-1]
+    assert agg.budget_rps is not None
+    assert agg.mean_rps > 3.0 * agg.budget_rps
+    # victims stay under their contracts
+    for s in spec.streams[:-1]:
+        assert s.budget_rps is not None and s.mean_rps < s.budget_rps
+
+    wl = spec.build(seed=0, horizon_s=60.0)
+    tenants = {r.tenant_id for r in wl.requests}
+    assert tenants == {"tenant_a", "tenant_b", "mallory"}
+    # tenant assignment is per-stream, so tier identifies the victim split
+    for r in wl.requests:
+        if r.tenant_id == "tenant_b":
+            assert r.tier == "relaxed"
+
+
+def test_noisy_neighbor_baseline_is_prefix_stable():
+    """Dropping the aggressor (the last stream) must not perturb the
+    victims' trace: the benchmark's aggressor-free baseline leg depends
+    on this draw-stability."""
+    from dataclasses import replace as dc_replace
+
+    spec = get_scenario("noisy_neighbor")
+    base = dc_replace(spec, streams=spec.streams[:-1])
+    full_wl = spec.build(seed=0, horizon_s=60.0)
+    base_wl = base.build(seed=0, horizon_s=60.0)
+    key = lambda wl: sorted(
+        (r.tenant_id, r.tier, r.arrival_s, r.prompt_len, r.output_len)
+        for r in wl.requests if r.tenant_id != "mallory"
+    )
+    assert key(full_wl) == key(base_wl)
