@@ -105,9 +105,17 @@ def run_cell(
     seed: int = 0,
     validate_trace: bool = True,
     workload=None,
+    policy: Optional[str] = None,
+    kv_checkpoint: bool = False,
+    policy_kw: Optional[Dict] = None,
 ) -> Dict:
     """Replay one (policy, fault scenario, cluster) cell with the KV audit
-    armed; returns the BENCH dict (scenario-matrix schema + fault layer)."""
+    armed; returns the BENCH dict (scenario-matrix schema + fault layer).
+    ``policy`` overrides the simulated policy name when it differs from the
+    ``system`` label keying the cell (cascade matrix: label "nitsum" runs
+    the "nitsum-resilient" planner); ``policy_kw`` feeds extra policy
+    constructor overrides through (the frontier sweep's
+    ``resilience_weight``)."""
     if tiers is None:
         tiers = scenario_tiers(perf, scenario_name)
     wl = workload
@@ -118,8 +126,9 @@ def run_cell(
     clear_perf_caches()
     t0 = time.perf_counter()
     sim, _ = run_system(
-        system, perf, tiers, n_chips, wl,
+        policy or system, perf, tiers, n_chips, wl,
         candidate_tps=CANDIDATE_TPS, kv_audit=True,
+        kv_checkpoint=kv_checkpoint, **(policy_kw or {}),
     )
     wall = time.perf_counter() - t0
     sim._kv_audit_check()  # final-state conservation, on every cell
@@ -128,10 +137,15 @@ def run_cell(
     incidents = [i for i in res.incidents if "time_to_recover_s" in i]
     return {
         "system": system,
+        "policy": policy or system,
         "scenario": scenario_name,
         "n_chips": n_chips,
         "horizon_s": horizon_s,
         "kv_audit": True,
+        "kv_checkpoint": kv_checkpoint,
+        "ckpt_restores": res.ckpt_restores,
+        "ckpt_restored_tokens": res.ckpt_restored_tokens,
+        "ckpt_saved_prefill_s": res.ckpt_saved_prefill_s,
         "slo": {
             t.name: {"ttft_ms": t.ttft_ms, "tpot_ms": t.tpot_ms}
             for t in tiers
@@ -140,7 +154,8 @@ def run_cell(
         "injected_rps": len(wl.requests) / wl.horizon_s,
         "faults": [
             {"t_s": f.t_s, "kind": f.kind, "chips": f.chips,
-             "duration_s": f.duration_s, "slowdown": f.slowdown}
+             "duration_s": f.duration_s, "slowdown": f.slowdown,
+             "domain": f.domain, "wave": f.wave}
             for f in wl.faults
         ],
         "goodput": res.goodput,
@@ -184,6 +199,17 @@ def run_cell(
 TTR_RESOLUTION_S = 5.0
 
 
+def beats(challenger: Dict, incumbent: Dict) -> bool:
+    """The matrix's win criterion: time-to-recover no slower beyond metric
+    resolution (censoring already counts as the full window) AND post-fault
+    goodput strictly better. Shared with benchmarks/cascade_matrix.py."""
+    return (
+        challenger["time_to_recover_s"]
+        <= incumbent["time_to_recover_s"] + TTR_RESOLUTION_S
+        and challenger["post_fault_goodput"] > incumbent["post_fault_goodput"]
+    )
+
+
 def score_family_wins(cells: Dict[str, Dict]) -> Dict[str, Dict]:
     """Per elemental family: does nitsum beat static-TP on BOTH
     time-to-recover (no slower beyond metric resolution; censoring counts
@@ -195,11 +221,7 @@ def score_family_wins(cells: Dict[str, Dict]) -> Dict[str, Dict]:
         s = cells.get(f"{fam}/sglang")
         if not n or not s:
             continue
-        won = (
-            n["time_to_recover_s"]
-            <= s["time_to_recover_s"] + TTR_RESOLUTION_S
-            and n["post_fault_goodput"] > s["post_fault_goodput"]
-        )
+        won = beats(n, s)
         out[fam] = {
             "won": won,
             "time_to_recover_s": {

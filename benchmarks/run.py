@@ -34,6 +34,7 @@ MODULES = [
     "kv_backpressure",
     "scenario_matrix",
     "fault_matrix",
+    "cascade_matrix",
     "roofline_table",
 ]
 

@@ -21,7 +21,12 @@ series into the per-incident metrics the robustness evaluation reports
     the last excursion turns the metric into arrival-noise roulette.
     ``censored`` is True when no sustained recovery happens before the
     replay ends or the next fault fires — the value then lower-bounds the
-    true recovery time at the window length;
+    true recovery time at the window length. When the NEXT fault fires
+    inside this incident's sustain window, a run cut short by it does
+    not count as sustained: overlapping cascades would otherwise
+    attribute the moment before the second hit as "recovery" from the
+    first (the clip-at-end shortcut is only valid at the end of
+    observation, where no later event can contradict the run);
   * ``slo_damage`` — per-tier count of requests denied their SLO relative
     to the pre-fault trend: baseline tier rate × window − realized good
     finishes, clamped at zero. This is deadline-slack damage in request
@@ -55,6 +60,53 @@ def _smooth(values: np.ndarray, width: int) -> np.ndarray:
     return num / den
 
 
+def time_to_recover_at(
+    timeline: Timeline,
+    t0: float,
+    bar: float,
+    smooth_s: float = 5.0,
+    sustain_s: float = 30.0,
+) -> Tuple[float, bool]:
+    """Sustained time-to-recover against an EXTERNAL absolute bar.
+
+    ``analyze_incidents`` measures each run against its own pre-fault
+    baseline — the right per-run dip accounting, but across systems it
+    credits a deeply degraded baseline with a trivially fast "recovery"
+    to its own lowered bar. This variant scores the smoothed series
+    against a caller-chosen goodput level (the cascade matrix uses
+    ``recover_frac`` x the best system's pre-cascade baseline), making
+    recovery times comparable across systems whose baselines differ by
+    double digits. Same sustain rule: recovered at the first sample at or
+    above the bar that starts a run of ``sustain_s`` consecutive
+    above-bar samples (clipped at the observation end). Returns
+    ``(ttr_s, censored)``; a series that never sustains the bar is
+    censored at the observation end (ttr = remaining window)."""
+    t = np.asarray([p[0] for p in timeline], dtype=float)
+    v = np.asarray([p[1] for p in timeline], dtype=float)
+    post = t >= t0
+    if not post.any():
+        return 0.0, False
+    dt = float(np.median(np.diff(t))) if len(t) > 1 else 1.0
+    dt = max(dt, 1e-9)
+    width = max(int(round(smooth_s / dt)), 1)
+    seg = _smooth(v, width)[post]
+    seg_t = t[post]
+    below = seg < bar
+    if not below.any():
+        return 0.0, False
+    n = len(below)
+    sustain = max(int(round(sustain_s / dt)), 1)
+    run = np.zeros(n + 1, dtype=int)
+    for i in range(n - 1, -1, -1):
+        run[i] = 0 if below[i] else run[i + 1] + 1
+    need = np.minimum(sustain, n - np.arange(n))
+    first_below = int(np.nonzero(below)[0][0])
+    cand = np.nonzero((run[:n] >= need) & (np.arange(n) >= first_below))[0]
+    if len(cand):
+        return float(seg_t[cand[0]] - t0), False
+    return float(seg_t[-1] - t0), True
+
+
 def analyze_incidents(
     timeline: Timeline,
     tier_timelines: Dict[str, Timeline],
@@ -82,8 +134,12 @@ def analyze_incidents(
     fire_times = [f["t"] for f in events] + [min(horizon_s, float(t[-1]))]
     for j, f in enumerate(events):
         t0, t1 = f["t"], fire_times[j + 1]
+        # truncated: this window ends because ANOTHER fault fires, not
+        # because observation ends — a sustain run may not clip there
+        truncated = j + 1 < len(events)
         if t1 <= t0:
             t1 = float(t[-1])
+            truncated = False
         pre = (t >= t0 - baseline_window_s) & (t < t0)
         post = (t >= t0) & (t <= t1)
         inc = dict(f)
@@ -114,7 +170,14 @@ def analyze_incidents(
             run = np.zeros(n + 1, dtype=int)
             for i in range(n - 1, -1, -1):
                 run[i] = 0 if below[i] else run[i + 1] + 1
-            need = np.minimum(sustain, n - np.arange(n))
+            if truncated:
+                # the next incident fires inside this window: only a FULL
+                # sustain run before it proves recovery — anything shorter
+                # is censored, not credited to the moment before the
+                # second hit (the overlapping-cascade misattribution bug)
+                need = np.full(n, sustain)
+            else:
+                need = np.minimum(sustain, n - np.arange(n))
             first_below = int(np.nonzero(below)[0][0])
             cand = np.nonzero(
                 (run[:n] >= need) & (np.arange(n) >= first_below)

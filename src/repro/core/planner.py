@@ -27,6 +27,14 @@ from repro.profiles.perf_model import (
     TPOT_DESIGN_MARGIN,
     mid_decode_ctx,
 )
+from repro.traces.workload import Topology
+
+# Per-host failure-rate multiple of the per-chip rate for the planner's
+# expected-recovery-cost term (docs/faults.md §Fault-aware planning): one
+# host event takes all of its chips down at once, so host hazard dominates
+# chip hazard by roughly the host's chip count in the incident matrix's
+# cascade families.
+HOST_HAZARD_RATIO = 4.0
 
 
 @dataclass(frozen=True)
@@ -85,12 +93,21 @@ class Planner:
         candidate_tps: Sequence[int] = (1, 2, 4, 8),
         chip_step: float = 1.0,
         mixed_discount: float = 0.8,  # prefill/decode interference penalty
+        resilience_weight: float = 0.0,
+        topology: Optional[Topology] = None,
     ):
         self.perf = perf
         self.tiers = {t.name: t for t in tiers}
         self.candidate_tps = tuple(candidate_tps)
         self.chip_step = chip_step
         self.mixed_discount = mixed_discount
+        # fault-aware planning (docs/faults.md §Fault-aware planning):
+        # weight > 0 discounts each candidate's goodput efficiency by its
+        # expected recovery cost, trading steady-state goodput for blast
+        # radius — the goodput-vs-resilience frontier's knob. 0 = pure
+        # goodput (the recorded goldens).
+        self.resilience_weight = resilience_weight
+        self.topology = topology or Topology()
         # candidate selection is independent of the demand *rate* (only its
         # length statistics), so memoize the chosen (tp_p, tp_d, thp, thd,
         # kind) per (tier, quantized lengths, pool size) — the per-window
@@ -143,6 +160,49 @@ class Planner:
         """Drop the per-instance candidate memo (cold-start benchmarking)."""
         self._cand_cache.clear()
 
+    # ---- expected recovery cost (docs/faults.md §Fault-aware planning) --
+    def chip_exposure(self, tp: int) -> float:
+        """Correlated-excess hazard of a TP-``tp`` group, in arbitrary
+        units: the extra chips a single failure-domain loss strands
+        BEYOND the domain itself. A host-contained group scores zero —
+        a host loss takes its chips but strands nothing outside the
+        blast, and its uncorrelated per-chip hazard is already priced by
+        realized goodput (every restart is a served-request loss the
+        estimator sees). A host-spanning group is the genuinely worse
+        shape: any one of its hosts dying stalls the WHOLE group, so
+        each spanned host beyond the first exposes all ``tp`` chips to a
+        correlated kill, weighted by the host event rate
+        (HOST_HAZARD_RATIO). Pricing raw ``tp`` here instead was
+        measured to distort steady-state layout choice among
+        host-contained candidates with zero resilience payoff
+        (docs/faults.md §Fault-aware planning)."""
+        return (
+            HOST_HAZARD_RATIO
+            * tp
+            * (self.topology.hosts_spanned(tp) - 1)
+        )
+
+    def _resilience_adjust(
+        self, ge: float, tp_p: int, tp_d: int, thp: float, thd: float,
+        kind: str,
+    ) -> float:
+        """Discount a candidate's goodput efficiency by its expected
+        recovery cost: GE / (1 + w · x̄), with x̄ the chip-weighted mean
+        exposure over the balanced unit's prefill and decode chips."""
+        w = self.resilience_weight
+        if not w or ge <= 0:
+            return ge
+        if kind == "mixed" or tp_p == tp_d:
+            xbar = self.chip_exposure(tp_p)
+        else:
+            y = 1.0 / (tp_d + tp_p * thd / thp)
+            x = y * thd / thp
+            cp, cd = x * tp_p, y * tp_d
+            xbar = (
+                cp * self.chip_exposure(tp_p) + cd * self.chip_exposure(tp_d)
+            ) / (cp + cd)
+        return ge / (1.0 + w * xbar)
+
     def _choose_candidate(
         self, name: str, tier: SLOTier, d: TierDemand, total_chips: int
     ) -> Optional[tuple]:
@@ -174,6 +234,7 @@ class Planner:
             if not _kv_feasible(tp_d):
                 continue
             ge, thp, thd = self.goodput_efficiency(tier, d, tp_p, tp_d)
+            ge = self._resilience_adjust(ge, tp_p, tp_d, thp, thd, "disagg")
             if ge > 0:
                 entries.append((ge, tp_p, tp_d, thp, thd, "disagg"))
         for tp in self.candidate_tps:
@@ -185,7 +246,8 @@ class Planner:
             if thp <= 0 or thd <= 0:
                 continue
             unit = self.mixed_discount * min(thp, thd)
-            entries.append((unit / tp, tp, tp, unit, unit, "mixed"))
+            ge = self._resilience_adjust(unit / tp, tp, tp, unit, unit, "mixed")
+            entries.append((ge, tp, tp, unit, unit, "mixed"))
         if not entries:
             chosen = None
         else:

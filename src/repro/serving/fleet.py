@@ -85,6 +85,16 @@ class FleetResult:
     def cross_cell_total(self) -> int:
         return sum(self.cross_cell_spills.values())
 
+    @property
+    def ckpt_restores(self) -> int:
+        """Fleet-wide checkpointed-KV partial restarts (docs/faults.md
+        §Checkpointed restart)."""
+        return sum(r.ckpt_restores for r in self.cells)
+
+    @property
+    def fault_restart_total(self) -> int:
+        return sum(r.fault_restart_total for r in self.cells)
+
 
 class FleetSimulator:
     """Compose cells under one admission tier and one clock."""
@@ -360,6 +370,7 @@ def run_fleet(
     kv_watermark: float = 0.9,
     kv_audit: bool = False,
     admission=None,
+    kv_checkpoint: bool = False,
     **policy_kw,
 ) -> Tuple[FleetSimulator, GoodputMeter]:
     """Build an ``n_cells`` x ``chips_per_cell`` fleet (fresh policy per
@@ -375,7 +386,7 @@ def run_fleet(
                 candidate_tps=candidate_tps, **policy_kw,
             ),
             kv_watermark=kv_watermark, kv_audit=kv_audit,
-            admission=admission,
+            admission=admission, kv_checkpoint=kv_checkpoint,
         )
         for _ in range(n_cells)
     ]

@@ -61,10 +61,19 @@ from repro.serving.global_scheduler import (
     ShardedScheduler,
     tenant_key,
 )
-from repro.traces.workload import TraceRequest, Workload
+from repro.traces.workload import Topology, TraceRequest, Workload
 
 _EPS = 1e-9
 _NO_CROSSERS = np.zeros(0, dtype=np.intp)
+
+# default resilience_weight for the "nitsum-resilient" policy. The
+# measured frontier (benchmarks/cascade_matrix.py --frontier; docs/
+# faults.md records the sweep) is a step, not a slope: any w > 0 flips
+# layouts to host-contained groups at ~0.3% steady-state goodput on
+# topologies where the exposure term binds (zero where groups already fit
+# a host), and the choice is insensitive to w across [0.002, 0.1] — 0.02
+# sits mid-range of that plateau
+DEFAULT_RESILIENCE_WEIGHT = 0.02
 
 
 @dataclass(frozen=True)
@@ -438,7 +447,7 @@ class Group:
         "gid", "spec", "sim", "prefill_q", "cur", "decode", "blocked_until",
         "batch_cap", "t_sync", "_epoch", "_ev_kind", "_step", "_batch_n",
         "_decode_active", "kv_tokens", "kv_seqs", "kv_capacity_bytes",
-        "ctx_ewma", "_cap_ctx", "_kv_win", "slow_factor",
+        "ctx_ewma", "_cap_ctx", "_kv_win", "slow_factor", "chips",
     )
 
     def __init__(self, gid: int, spec: GroupSpec, sim: "Simulator"):
@@ -472,8 +481,13 @@ class Group:
         self.kv_seqs: int = 0
         self.kv_capacity_bytes: float = sim.perf.kv_capacity_bytes(spec.tp)
         # straggler fault: >1.0 scales every step/prefill time until the
-        # fault window ends (docs/faults.md)
+        # fault window ends (docs/faults.md). A TP group runs at its
+        # SLOWEST chip, so this is max over the member chips' slowdowns.
         self.slow_factor: float = 1.0
+        # chip identity (docs/faults.md §Failure domains): which physical
+        # chips this group holds — assigned by Simulator._alloc_chips,
+        # read by domain-scoped faults and per-chip degradation
+        self.chips: Tuple[int, ...] = ()
         # --- event-engine state ---
         self.t_sync: float = sim.now  # decode/prefill integrated up to here
         self._epoch: int = 0  # invalidates stale heap entries
@@ -1104,15 +1118,26 @@ class NitsumPolicy(Policy):
     def __init__(
         self, perf, tiers, dynamic_tp=True, fast_switch=True, slo_aware=True,
         window_s=1.0, n_shards=1, shard_by="hash", reconcile_s=0.0,
-        shard_seed=0, **kw,
+        shard_seed=0, resilience_weight=0.0, **kw,
     ):
         super().__init__(perf, tiers, **kw)
         self.dynamic_tp = dynamic_tp
         self.fast_switch = fast_switch
         self.slo_aware = slo_aware
-        self.planner = Planner(perf, tiers, candidate_tps=self.tps)
+        # fault-aware planning (docs/faults.md §Fault-aware planning):
+        # > 0 trades steady-state goodput for blast radius — candidate
+        # layouts are discounted by expected recovery cost, in the
+        # planner's per-tier choice AND in the shared-pool/uniform-plan
+        # comparisons below
+        self.resilience_weight = resilience_weight
+        self.planner = Planner(
+            perf, tiers, candidate_tps=self.tps,
+            resilience_weight=resilience_weight,
+        )
         self.mig = MigrationModel()
         self.name = "nitsum" + ("" if fast_switch else "-slowswitch")
+        if resilience_weight > 0:
+            self.name = "nitsum-resilient"
         # control-plane sharding (docs/control_plane.md): with n_shards > 1
         # or a nonzero reconcile interval the dispatch view is a
         # ShardedScheduler whose staleness is bounded by reconcile_s; the
@@ -1135,7 +1160,25 @@ class NitsumPolicy(Policy):
             )
         return GlobalScheduler(handles)
 
-    def _mk_plan(self, sim) -> List[GroupSpec]:
+    def _plan_chips(self, sim) -> int:
+        """The pool fault-aware planning plans over: degraded chips
+        (stragglers, flaky-link on-windows) are QUARANTINED — a TP group
+        runs at its slowest member, so seating one 3x-slow chip gates a
+        whole group, while planning around it idles only that chip. The
+        allocator seats slow chips last, so a plan sized to the healthy
+        pool sidelines them entirely (shrink-TP-in-place beats
+        migrate-away). Identity when resilience is off — the ablation and
+        the recorded goldens keep planning over the raw pool."""
+        n = sim.n_chips
+        if not getattr(self, "resilience_weight", 0.0):
+            return n
+        slow = getattr(sim, "_chip_slow", None)
+        if not slow:
+            return n
+        return max(n - len(slow), self.perf.min_tp(self.tps))
+
+    def _mk_plan(self, sim, n_chips: Optional[int] = None) -> List[GroupSpec]:
+        n_chips = sim.n_chips if n_chips is None else n_chips
         demands = {}
         for t in self.tiers.values():
             if t.background:
@@ -1149,8 +1192,8 @@ class NitsumPolicy(Policy):
                 )
         tp0 = self.perf.min_tp(self.tps)
         if not demands:
-            return [GroupSpec(None, "mixed", tp0)] * (sim.n_chips // tp0)
-        plan = self.planner.plan(PlannerInputs(demands, sim.n_chips))
+            return [GroupSpec(None, "mixed", tp0)] * (n_chips // tp0)
+        plan = self.planner.plan(PlannerInputs(demands, n_chips))
         sim.last_planning_ms = plan.planning_ms
         specs: List[GroupSpec] = []
         for tier, tp in plan.tiers.items():
@@ -1172,7 +1215,7 @@ class NitsumPolicy(Policy):
         # here, so hardcoding min_tp let a 2x-worse per-chip operating
         # point dominate the cluster
         used = sum(s.tp for s in specs)
-        left = sim.n_chips - used
+        left = n_chips - used
         tp_s = self._shared_tp(sim)
         specs += [GroupSpec(None, "mixed", tp_s)] * (left // tp_s)
         left -= (left // tp_s) * tp_s
@@ -1200,10 +1243,25 @@ class NitsumPolicy(Policy):
                 continue
             thp = self.perf.max_prefill_rps(d.prompt_len, tp, ttft)
             thd = self.perf.max_decode_rps(ctx, d.output_len, tp, tpot)
-            rate = min(thp, thd) / tp
+            rate = self.planner._resilience_adjust(
+                min(thp, thd) / tp, tp, tp, thp, thd, "mixed"
+            )
             if rate > best:
                 best, best_tp = rate, tp
         return best_tp
+
+    def _resilience_score(self, est: float, specs) -> float:
+        """Layout-comparison key under fault-aware planning: the goodput
+        estimate discounted by the layout's chip-weighted mean recovery
+        exposure (identity when resilience_weight is 0)."""
+        w = self.resilience_weight
+        if not w or est <= 0 or not specs:
+            return est
+        tot = sum(s.tp for s in specs)
+        xbar = sum(
+            s.tp * self.planner.chip_exposure(s.tp) for s in specs
+        ) / max(tot, 1)
+        return est / (1.0 + w * xbar)
 
     def _mk_plan_with_shared(self, sim) -> List[GroupSpec]:
         """Planner output vs uniform shared mixed pools: take the best by
@@ -1211,11 +1269,15 @@ class NitsumPolicy(Policy):
         coincide (loose SLOs / uniform load) — it is the paper's 'in stable
         settings a fixed configuration may suffice' case, and including it
         makes Nitsum's config space a superset of every static baseline."""
-        cands = [self._mk_plan(sim)]
+        n = self._plan_chips(sim)
+        cands = [self._mk_plan(sim, n)]
         for tp in self.tps:
-            if self.perf.fits(tp) and sim.n_chips // tp >= 1:
-                cands.append([GroupSpec(None, "mixed", tp)] * (sim.n_chips // tp))
-        return max(cands, key=lambda s: self.estimate_specs(sim, s))
+            if self.perf.fits(tp) and n // tp >= 1:
+                cands.append([GroupSpec(None, "mixed", tp)] * (n // tp))
+        return max(
+            cands,
+            key=lambda s: self._resilience_score(self.estimate_specs(sim, s), s),
+        )
 
     def initial_specs(self, sim):
         self._cur_specs = self._mk_plan_with_shared(sim)
@@ -1415,11 +1477,44 @@ class NitsumPolicy(Policy):
         """Forced replan: re-solve the plan over the changed chip pool,
         bypassing the hysteresis streak (a fault is a step change, not
         demand noise). Also invalidates the scheduler's bandwidth signature
-        so straggler slowdowns reach the dispatch view immediately."""
+        so straggler slowdowns reach the dispatch view immediately.
+
+        Two reactions are part of fault-AWARE planning proper and gated on
+        ``resilience_weight`` (the no-resilience ablation keeps the naive
+        reaction on both):
+
+        - partial degradation (``chip_straggler`` / ``link_flap``) is a
+          planner event only under fault-aware planning: the resilient
+          policy re-solves and QUARANTINES the degraded chip
+          (``_plan_chips``), while the ablation's planner only hears about
+          hard pool changes — its dispatch view sees the slowdown, but the
+          gated group keeps running at its slowest chip.
+        - ``recovery`` rejoins gently: returned chips come back as shared
+          mixed groups — a pure addition that touches no surviving group
+          and restarts no in-flight work — and the priced switch criterion
+          re-optimizes the layout once the pool is warm (``window``). The
+          ablation re-solves the full plan at recovery time, paying a
+          restart storm at the exact moment demand is most backlogged."""
         self._gain_streak = 0
         self._sync_sig = None
         if not self.dynamic_tp:
             return super().on_fault(sim, event)
+        if event.kind in ("chip_straggler", "link_flap") and not getattr(
+            self, "resilience_weight", 0.0
+        ):
+            return None
+        if event.kind == "recovery" and getattr(self, "resilience_weight", 0.0):
+            cur = [g.spec for g in sim.groups]
+            free = sim.n_chips - sum(s.tp for s in cur)
+            tp0 = self.perf.min_tp(self.tps)
+            if free < tp0:
+                return None
+            tp_s = self._shared_tp(sim)
+            specs = cur + [GroupSpec(None, "mixed", tp_s)] * (free // tp_s)
+            free -= (free // tp_s) * tp_s
+            specs += [GroupSpec(None, "mixed", tp0)] * (free // tp0)
+            self._cur_specs = specs
+            return specs
         specs = self._mk_plan_with_shared(sim)
         self._cur_specs = specs
         return specs
@@ -1558,6 +1653,14 @@ class SimResult:
     fault_timeline: List[dict] = field(default_factory=list)
     # per-tier count of resident sequences force-restarted by faults
     fault_restarts: Dict[str, int] = field(default_factory=dict)
+    # checkpointed-KV partial restarts (docs/faults.md §Checkpointed
+    # restart): kills that restored a host-offloaded snapshot instead of
+    # re-prefilling, the tokens those snapshots carried, and the
+    # re-prefill/regeneration seconds the restores saved net of the
+    # priced restore transfer
+    ckpt_restores: int = 0
+    ckpt_restored_tokens: float = 0.0
+    ckpt_saved_prefill_s: float = 0.0
     # per-incident recovery metrics (core/incidents.py): baseline goodput,
     # dip depth/width, time-to-recover, per-tier SLO damage
     incidents: List[dict] = field(default_factory=list)
@@ -1603,6 +1706,10 @@ class Simulator:
         ctx_ewma_tau_s: float = 5.0,
         cap_drift_frac: float = 0.05,
         admission=None,
+        kv_checkpoint: bool = False,
+        ckpt_interval_tokens: int = 64,
+        ckpt_restore_bps: float = 1e9,
+        topology: Optional[Topology] = None,
     ):
         if engine != "event":
             raise ValueError(
@@ -1671,6 +1778,32 @@ class Simulator:
         self.batch_route_min = 4
         self._tier_defaults: Dict[Optional[str], TierDemand] = {}
         # fault machinery (docs/faults.md)
+        # failure-domain tree + chip identity: chips are ints
+        # 0..chips_total-1; _free_chips = live chips held by no group,
+        # _down_chips = failed chips awaiting a recovery, _chip_slow =
+        # per-chip slowdown factors (group slow_factor = max over members).
+        # Invariant: n_chips == chips_total - len(_down_chips).
+        self.topology = topology or Topology()
+        self._free_chips: List[int] = list(range(n_chips))
+        self._down_chips: set = set()
+        self._chip_slow: Dict[int, float] = {}
+        self._alloc_ctr = 0  # round-robin power-domain start for placement
+        # checkpointed KV / partial restart (docs/faults.md §Checkpointed
+        # restart): OFF by default — the recorded goldens embed full
+        # re-prefill restart semantics. When on, a killed decode-phase
+        # sequence restores its host-offloaded KV snapshot (latest
+        # ckpt_interval_tokens multiple) at ckpt_restore_bps instead of
+        # re-prefilling, whenever the priced restore beats regeneration.
+        self.kv_checkpoint = kv_checkpoint
+        self.ckpt_interval_tokens = max(int(ckpt_interval_tokens), 1)
+        self.ckpt_restore_bps = ckpt_restore_bps
+        self.ckpt_restores = 0
+        self.ckpt_restored_tokens = 0.0
+        self.ckpt_saved_prefill_s = 0.0
+        # sequences stranded while the pool is below the model's minimum
+        # TP (a deep cascade can leave no feasible group): parked until a
+        # recovery rebuilds the pool, SLO clocks still running
+        self._parked: List[SimReq] = []
         self.fault_log: List[dict] = []
         self.fault_restarts: Dict[str, int] = {t.name: 0 for t in tiers}
         self.tier_timelines: Dict[str, List[Tuple[float, float]]] = {
@@ -1711,6 +1844,9 @@ class Simulator:
             reconfig_timeline=list(self.reconfig_timeline),
             fault_timeline=list(self.fault_log),
             fault_restarts=dict(self.fault_restarts),
+            ckpt_restores=self.ckpt_restores,
+            ckpt_restored_tokens=self.ckpt_restored_tokens,
+            ckpt_saved_prefill_s=self.ckpt_saved_prefill_s,
             incidents=analyze_incidents(
                 self.timeline, self.tier_timelines, self.fault_log, horizon_s
             ),
@@ -1777,6 +1913,41 @@ class Simulator:
         span = max(self.monitor_window_s, 1e-6)
         return TierDemand(rps=n / span, prompt_len=int(sp / n), output_len=int(so / n))
 
+    # ---- chip identity (docs/faults.md §Failure domains) -----------------
+    def _group_slow_factor(self, chips) -> float:
+        """A TP group is gated by its slowest member chip."""
+        cs = self._chip_slow
+        if not cs:
+            return 1.0
+        return max((cs.get(c, 1.0) for c in chips), default=1.0)
+
+    def _alloc_chips(self, tp: int) -> Tuple[int, ...]:
+        """Assign ``tp`` chips to a new group: healthy (non-degraded)
+        chips first, scanned from a rotating power-domain offset so
+        consecutive groups — hence a plan's tiers — spread across failure
+        domains and a domain loss strands fewer whole tiers.
+        Deterministic given the allocation history, so replays of one
+        (trace, seed) stay bit-identical."""
+        free = sorted(self._free_chips)
+        nd = max(self.topology.n_domains(self.chips_total), 1)
+        start = self._alloc_ctr % nd
+        self._alloc_ctr += 1
+        dom = self.topology.domain_of
+        slow = self._chip_slow
+        order = sorted(
+            free, key=lambda c: (c in slow, (dom(c) - start) % nd, c)
+        )
+        take = set(order[:tp])
+        self._free_chips = [c for c in free if c not in take]
+        return tuple(sorted(take))
+
+    def _release_chips(self, chips) -> None:
+        down = self._down_chips
+        have = set(self._free_chips)
+        self._free_chips.extend(
+            c for c in chips if c not in down and c not in have
+        )
+
     def _apply_specs(
         self, specs: List[GroupSpec], charge_cost: bool, reload_s: float = 0.0
     ) -> None:
@@ -1794,21 +1965,34 @@ class Simulator:
         for g in old:
             g.decode.sync()  # switch-cost estimation reads r.ctx below
         # keep groups whose spec survives; rebuild the rest
-        new_groups: List[Group] = []
         pool = list(old)
+        plan: List = []  # kept Group, or GroupSpec still to build
         for spec in specs:
             match = next((g for g in pool if g.spec == spec), None)
             if match is not None:
                 pool.remove(match)
-                new_groups.append(match)
+                plan.append(match)
             else:
-                g = Group(self._gid, spec, self)
-                self._gid += 1
-                if charge_cost and old:
-                    g.blocked_until = self.now + max(
-                        self.policy.switch_cost_s(self, g), reload_s
-                    )
-                new_groups.append(g)
+                plan.append(spec)
+        # dissolved groups hand their chips back first, so rebuilt groups
+        # can re-seat on them (chip identity: a rebuilt group inheriting a
+        # degraded chip inherits its slowdown)
+        for g in pool:
+            self._release_chips(g.chips)
+        new_groups: List[Group] = []
+        for item in plan:
+            if isinstance(item, Group):
+                new_groups.append(item)
+                continue
+            g = Group(self._gid, item, self)
+            self._gid += 1
+            g.chips = self._alloc_chips(item.tp)
+            g.slow_factor = self._group_slow_factor(g.chips)
+            if charge_cost and old:
+                g.blocked_until = self.now + max(
+                    self.policy.switch_cost_s(self, g), reload_s
+                )
+            new_groups.append(g)
         # redistribute requests from dissolved groups
         orphans: List[SimReq] = []
         for g in pool:
@@ -2016,8 +2200,9 @@ class Simulator:
         self.tenant_retries[tenant] = self.tenant_retries.get(tenant, 0) + 1
         if adm.try_admit(tenant, cost, self.now):
             self._recent_push(tr)
-            g = self.policy.route(self, req)
-            self._place(req, g)
+            g = self._route_or_park(req)
+            if g is not None:
+                self._place(req, g)
             return
         if tries < adm.max_retries(tenant):
             delay = adm.retry_delay_s(tenant, cost, self.now)
@@ -2029,7 +2214,9 @@ class Simulator:
         # retries exhausted: serve best-effort (sinks in prefill_priority)
         self.tenant_demoted[tenant] = self.tenant_demoted.get(tenant, 0) + 1
         self._recent_push(tr)
-        g = self.policy.route(self, req)
+        g = self._route_or_park(req)
+        if g is None:
+            return
         gs = getattr(self.policy, "gs", None)
         if gs is not None and req.feasible and req.dispatch_gid is not None:
             # release the bandwidth the route just committed: a demoted
@@ -2040,12 +2227,26 @@ class Simulator:
         req.demoted = True
         self._place(req, g)
 
+    def _route_or_park(self, req: SimReq) -> Optional[Group]:
+        """Route through the policy — unless a deep cascade left the pool
+        with no feasible group at all, in which case the request parks
+        with the fault orphans until a recovery rebuilds the pool (its
+        SLO clock keeps running; most parked work misses SLO, which is
+        exactly the outage's cost)."""
+        if not self.groups:
+            req.group = None
+            self._parked.append(req)
+            return None
+        return self.policy.route(self, req)
+
     def _admit(self, tr: TraceRequest) -> None:
         if self.admission is not None and not self._admission_gate(tr):
             return
         self._recent_push(tr)
         req = SimReq(tr, background=tr.tier in self._bg_tiers)
-        g = self.policy.route(self, req)
+        g = self._route_or_park(req)
+        if g is None:
+            return
         self._place(req, g)
 
     def _place(self, req: SimReq, g: Group) -> None:
@@ -2081,6 +2282,8 @@ class Simulator:
         smaller ones take the scalar path where the snapshot would cost
         more than it saves."""
         route_batch = getattr(self.policy, "route_batch", None)
+        if not self.groups:
+            route_batch = None  # scalar path parks each request
         if route_batch is None or len(batch) < self.batch_route_min:
             for tr in batch:
                 self._admit(tr)
@@ -2101,7 +2304,9 @@ class Simulator:
         route inside this cell and place it. Re-spilling back out is
         suppressed by the fleet's in-progress guard."""
         self._recent_push(req.tr)
-        g = self.policy.route(self, req)
+        g = self._route_or_park(req)
+        if g is None:
+            return
         self._place(req, g)
 
     # ---- fault injection (docs/faults.md) --------------------------------
@@ -2128,13 +2333,53 @@ class Simulator:
         (its KV is gone) while the SLO clock keeps running from the
         original arrival. Routing goes through the policy + the PR-2
         admission/spill path, so restart storms spread by KV headroom and
-        demote to best-effort exactly like arrival bursts do."""
+        demote to best-effort exactly like arrival bursts do.
+
+        With ``kv_checkpoint`` on (docs/faults.md §Checkpointed restart),
+        a decode-phase victim holds a host-offloaded snapshot of its KV
+        (prompt KV at first token, then every ``ckpt_interval_tokens``
+        decoded tokens). If restoring that snapshot at
+        ``ckpt_restore_bps`` is cheaper than regenerating it, the kill
+        becomes a partial replay: the sequence resumes decode at the
+        snapshot token after a priced restore delay — no re-prefill.
+        Demoted/best-effort sequences restore the same way (PR 9's
+        host-offload follow-on): the snapshot exists regardless of class."""
         gs = getattr(self.policy, "gs", None)
         if gs is not None and r.dispatch_gid is not None and r.first_token_s is None:
             # the request never reached on_prefill_done, so its dispatch
             # commitment is still held — release it before re-dispatching
             gs.complete(r.dispatch_gid, r.rate_cost)
         r.dispatch_gid = None
+        if not self.groups:
+            # nowhere to run (pool below min TP): park until a recovery
+            # re-forms groups — _apply_fault drains the parked list
+            r.group = None
+            self._parked.append(r)
+            return
+        if self.kv_checkpoint and r.first_token_s is not None and self.groups:
+            iv = self.ckpt_interval_tokens
+            ckpt = math.floor(r.tokens / iv) * iv
+            prompt = r.tr.prompt_len
+            restore_s = self.perf.seq_kv_bytes(prompt + ckpt) / self.ckpt_restore_bps
+            tp_ref = (
+                r.group.spec.tp if r.group is not None else self.groups[0].spec.tp
+            )
+            tier = self.tiers.get(r.tr.tier)
+            tpot_s = tier.tpot_ms / 1e3 if tier is not None else 0.02
+            regen_s = self.perf.prefill_time_s(prompt, tp_ref) + ckpt * tpot_s
+            if restore_s < regen_s:
+                self.ckpt_restores += 1
+                self.ckpt_restored_tokens += prompt + ckpt
+                self.ckpt_saved_prefill_s += regen_s - restore_s
+                r.tokens = max(float(ckpt), 1.0)  # first token survived too
+                r.prefill_left_s = 0.0
+                r._penalty = 0.0
+                r.group = None
+                heapq.heappush(
+                    self._fault_heap,
+                    (self.now + restore_s, next(self._seq), ("ckpt_restore", r)),
+                )
+                return
         r.tokens = 0.0
         r.first_token_s = None
         r.prefill_left_s = 0.0
@@ -2170,21 +2415,153 @@ class Simulator:
                 gs.mark_dead(gid)
         return orphans
 
+    def _resolve_domain_host(self, ev) -> Optional[int]:
+        """Resolve a domain-scoped event to one victim host. Events of one
+        cascade share ``ev.seed``, so every wave lands in the SAME
+        rack/power domain; ``ev.wave`` walks a seeded permutation of the
+        member hosts — a rack/power cascade fans out host by host."""
+        topo, total = self.topology, self.chips_total
+        n_hosts = topo.n_hosts(total)
+        if n_hosts <= 0:
+            return None
+        wave = max(ev.wave, 0)
+        if ev.domain == "host":
+            perm = np.random.RandomState(ev.seed).permutation(n_hosts)
+            return int(perm[wave % n_hosts])
+        hosts = self._domain_unit_hosts(ev)
+        perm = np.random.RandomState(ev.seed + 1).permutation(len(hosts))
+        return int(hosts[perm[wave % len(hosts)]])
+
+    def _domain_unit_hosts(self, ev) -> Tuple[int, ...]:
+        topo, total = self.topology, self.chips_total
+        if ev.domain == "rack":
+            rack = int(np.random.RandomState(ev.seed).randint(topo.n_racks(total)))
+            return topo.rack_hosts(rack, total)
+        if ev.domain == "power":
+            dom = int(np.random.RandomState(ev.seed).randint(topo.n_domains(total)))
+            return topo.domain_hosts(dom, total)
+        raise ValueError(f"unknown fault domain {ev.domain!r}")
+
+    def _domain_loss_chips(self, ev) -> List[int]:
+        host = self._resolve_domain_host(ev)
+        if host is None:
+            return []
+        down = self._down_chips
+        return [
+            c for c in self.topology.host_chips(host, self.chips_total)
+            if c not in down
+        ]
+
+    def _domain_recovery_chips(self, ev) -> List[int]:
+        """Chips a domain-scoped recovery restores: the down chips of the
+        cascade's unit (its host for ``domain="host"``; the whole rack /
+        power domain otherwise — one repair brings the unit back), capped
+        at ``ev.chips`` when the spec asks for a partial restore."""
+        topo, total = self.topology, self.chips_total
+        if ev.domain == "host":
+            host = self._resolve_domain_host(ev)
+            unit = topo.host_chips(host, total) if host is not None else ()
+        else:
+            unit = [
+                c for h in self._domain_unit_hosts(ev)
+                for c in topo.host_chips(h, total)
+            ]
+        down = self._down_chips
+        out = sorted(c for c in unit if c in down)
+        if ev.chips > 0:
+            out = out[: ev.chips]
+        return out
+
+    def _set_chip_slow(self, chip: int, slow: float) -> None:
+        """Mark one chip degraded; the group holding it runs at the
+        slowest member (flaky-link on-window, chip straggler start)."""
+        self._chip_slow[chip] = max(slow, 1.0)
+        for g in self.groups:
+            if chip in g.chips:
+                g.advance_to(self.now)
+                g.slow_factor = self._group_slow_factor(g.chips)
+                self._schedule_group(g)
+        if hasattr(self.policy, "_sync_sig"):
+            self.policy._sync_sig = None  # republish degraded bandwidth
+
+    def _end_chip_slow(self, chips, log: bool) -> None:
+        """Clear degradation on ``chips`` — matched by chip identity, not
+        group handle, so a victim group dissolved and rebuilt by a
+        mid-incident replan still recovers (the rebuilt group inherits
+        the chips, and this clears them wherever they now live)."""
+        for c in chips:
+            self._chip_slow.pop(c, None)
+        chip_set = set(chips)
+        affected = [
+            g for g in self.groups if chip_set.intersection(g.chips)
+        ]
+        for g in affected:
+            g.advance_to(self.now)
+            g.slow_factor = self._group_slow_factor(g.chips)
+            self._schedule_group(g)
+        if log and affected:
+            self.fault_log.append({
+                "t": self.now, "kind": "straggler_end",
+                "victim_gids": sorted(g.gid for g in affected),
+            })
+        if affected and hasattr(self.policy, "_sync_sig"):
+            self.policy._sync_sig = None  # republish full bandwidth
+
+    def _straggle_chip_of(self, ev, g: Group) -> Optional[int]:
+        if not g.chips:
+            return None
+        idx = int(np.random.RandomState(ev.seed + 5).randint(len(g.chips)))
+        return g.chips[idx]
+
     def _apply_fault(self, ev) -> None:
         """Apply one FaultEvent at ``self.now`` (== ev.t_s)."""
         for g in self.groups:
             g.advance_to(self.now)
         entry = {"t": self.now, "kind": ev.kind}
+        if ev.domain:
+            entry["domain"] = ev.domain
         orphans: List[SimReq] = []
         reload_s = 0.0
         if ev.kind in ("chip_loss", "host_loss"):
-            # lose exactly `chips` chips (clamped to keep the pool alive);
-            # every group holding a lost chip dies whole, and its surviving
-            # chips are stranded until a replan re-forms groups around them
-            lost = min(max(ev.chips, 1), max(self.n_chips - 1, 0))
-            victims = self._pick_victims(ev.seed, lost)
+            # lose chips (clamped to keep the pool alive); every group
+            # holding a lost chip dies whole, and its surviving chips are
+            # stranded until a replan re-forms groups around them
+            if ev.domain:
+                # domain-correlated: the victim is a topology unit — all
+                # live chips of the resolved host go down together
+                lost_chips = self._domain_loss_chips(ev)
+                if len(lost_chips) >= self.n_chips:
+                    lost_chips = lost_chips[: max(self.n_chips - 1, 0)]
+                lost_set = set(lost_chips)
+                victims = [
+                    g for g in sorted(self.groups, key=lambda g: g.gid)
+                    if lost_set.intersection(g.chips)
+                ]
+                lost = len(lost_chips)
+            else:
+                # legacy anonymous draw (recorded goldens embed it): the
+                # seeded group permutation picks victims, and identity is
+                # assigned after the fact — victims' chips die first, the
+                # remainder comes from the free pool
+                lost = min(max(ev.chips, 1), max(self.n_chips - 1, 0))
+                victims = self._pick_victims(ev.seed, lost)
+                cand = [c for g in victims for c in g.chips]
+                seen = set(cand)
+                cand.extend(
+                    c for c in sorted(self._free_chips) if c not in seen
+                )
+                lost_set = set(cand[:lost])
+                lost = len(lost_set)
             self.n_chips -= lost
+            self._down_chips.update(lost_set)
+            self._free_chips = [
+                c for c in self._free_chips if c not in lost_set
+            ]
             orphans = self._kill_groups(victims)
+            for g in victims:
+                # the victim group's surviving chips are stranded back
+                # into the free pool until a replan re-forms around them
+                self._release_chips(c for c in g.chips if c not in lost_set)
             entry.update(
                 chips_lost=lost,
                 victim_gids=sorted(g.gid for g in victims),
@@ -2201,18 +2578,86 @@ class Simulator:
         elif ev.kind == "straggler":
             victims = self._pick_victims(ev.seed, 1)
             for g in victims:
-                g.slow_factor = max(ev.slowdown, 1.0)
+                slow = max(ev.slowdown, 1.0)
+                for c in g.chips:
+                    self._chip_slow[c] = slow
+                g.slow_factor = self._group_slow_factor(g.chips) if g.chips else slow
                 heapq.heappush(
                     self._fault_heap,
                     (self.now + ev.duration_s, next(self._seq),
-                     ("straggler_end", g.gid)),
+                     ("straggler_end", g.chips)),
                 )
             entry.update(
                 victim_gids=sorted(g.gid for g in victims),
                 slowdown=ev.slowdown, duration_s=ev.duration_s,
             )
+        elif ev.kind == "chip_straggler":
+            # partial degradation: ONE chip of the victim group straggles;
+            # the whole group runs at its slowest chip, so shrinking TP in
+            # place (excluding the chip) beats migrating the group away
+            victims = self._pick_victims(ev.seed, 1)
+            hit = []
+            for g in victims:
+                chip = self._straggle_chip_of(ev, g)
+                if chip is None:
+                    continue
+                self._chip_slow[chip] = max(ev.slowdown, 1.0)
+                g.slow_factor = self._group_slow_factor(g.chips)
+                hit.append(chip)
+                heapq.heappush(
+                    self._fault_heap,
+                    (self.now + ev.duration_s, next(self._seq),
+                     ("straggler_end", (chip,))),
+                )
+            entry.update(
+                victim_gids=sorted(g.gid for g in victims),
+                chips_slow=sorted(hit),
+                slowdown=ev.slowdown, duration_s=ev.duration_s,
+            )
+        elif ev.kind == "link_flap":
+            # flaky ICI link: seeded intermittent slow windows on one chip
+            # inside duration_s — each on-window degrades whoever holds
+            # the chip at that moment (toggles are silent in fault_log)
+            victims = self._pick_victims(ev.seed, 1)
+            hit, flaps = [], 0
+            for g in victims:
+                chip = self._straggle_chip_of(ev, g)
+                if chip is None:
+                    continue
+                hit.append(chip)
+                rng = np.random.RandomState(ev.seed + 9)
+                t = 0.0
+                while t < ev.duration_s:
+                    start = t + float(rng.exponential(4.0))
+                    if start >= ev.duration_s:
+                        break
+                    end = min(start + float(rng.exponential(3.0)), ev.duration_s)
+                    heapq.heappush(
+                        self._fault_heap,
+                        (self.now + start, next(self._seq),
+                         ("flap_on", chip, max(ev.slowdown, 1.0))),
+                    )
+                    heapq.heappush(
+                        self._fault_heap,
+                        (self.now + end, next(self._seq), ("flap_off", chip)),
+                    )
+                    flaps += 1
+                    t = end
+            entry.update(
+                victim_gids=sorted(g.gid for g in victims),
+                chips_slow=sorted(hit), flaps=flaps,
+                slowdown=ev.slowdown, duration_s=ev.duration_s,
+            )
         elif ev.kind == "recovery":
-            restored = min(ev.chips, self.chips_total - self.n_chips)
+            if ev.domain:
+                chips = self._domain_recovery_chips(ev)
+            else:
+                restored_n = min(ev.chips, self.chips_total - self.n_chips)
+                chips = sorted(self._down_chips)[:restored_n]
+            restored = len(chips)
+            for c in chips:
+                self._down_chips.discard(c)
+            self._release_chips(chips)
             self.n_chips += restored
             # rejoined chips hold no weights: any group formed in reaction
             # pays a full host-to-HBM reload (the recovery storm)
@@ -2232,6 +2677,9 @@ class Simulator:
             self._apply_specs(
                 self.policy.initial_specs(self), charge_cost=False,
             )
+        if self.groups and self._parked:
+            orphans = self._parked + orphans
+            self._parked = []
         for r in orphans:
             self._fault_restart(r)
         for g in self.groups:
@@ -2239,22 +2687,37 @@ class Simulator:
         if self.kv_audit:
             self._kv_audit_check()
 
-    def _end_straggler(self, gid: int) -> None:
-        g = self._by_gid.get(gid)
-        if g is None:
-            return  # victim was dissolved (replan/fault) before recovering
-        g.advance_to(self.now)
-        g.slow_factor = 1.0
-        self.fault_log.append({"t": self.now, "kind": "straggler_end",
-                               "victim_gids": [gid]})
-        gs = getattr(self.policy, "gs", None)
-        if gs is not None and hasattr(self.policy, "_sync_sig"):
-            self.policy._sync_sig = None  # republish full bandwidth
-        self._schedule_group(g)
+    def _finish_restore(self, r: SimReq) -> None:
+        """A checkpointed-KV restore completed: the sequence re-enters
+        decode at its snapshot token on a policy-chosen group (no
+        re-prefill — the restored KV is resident again)."""
+        if not self.groups:
+            # the pool died while the restore was in flight: the snapshot
+            # has nowhere to land, fall back to a full restart
+            self._fault_restart(r)
+            return
+        tgt = self.policy.decode_target(self, r, self.groups[0])
+        tgt.advance_to(self.now)
+        tgt.add_decode(r)
+        tgt._kv_charge(tgt._kv_ctx(r), 1)
+        r.group = tgt
+        self._schedule_group(tgt)
+        if self.kv_audit:
+            self._kv_audit_check()
 
     def _apply_fault_action(self, action) -> None:
-        if isinstance(action, tuple) and action[0] == "straggler_end":
-            self._end_straggler(action[1])
+        if isinstance(action, tuple):
+            tag = action[0]
+            if tag == "straggler_end":
+                self._end_chip_slow(action[1], log=True)
+            elif tag == "flap_on":
+                self._set_chip_slow(action[1], action[2])
+            elif tag == "flap_off":
+                self._end_chip_slow((action[1],), log=False)
+            elif tag == "ckpt_restore":
+                self._finish_restore(action[1])
+            else:
+                raise ValueError(f"unknown fault action {tag!r}")
         else:
             self._apply_fault(action)
 
@@ -2355,6 +2818,10 @@ class Simulator:
         externally), and arm the heaps. After this, ``_next_time`` /
         ``_process`` advance the simulation one event-time at a time — the
         fleet layer drives many cells under one clock this way."""
+        if workload.topology is not None:
+            # the trace declares the failure-domain tree; bind it before
+            # the initial plan so chip placement spreads across it
+            self.topology = workload.topology
         arr = self._setup(workload, demand_scale)
         self._horizon = workload.horizon_s + drain_s
         if external_arrivals:
@@ -2462,6 +2929,13 @@ def make_policy(
         "nitsum-slowswitch": lambda: NitsumPolicy(
             perf, tiers, fast_switch=False, candidate_tps=tps, **policy_kw
         ),
+        # fault-aware planning on (docs/faults.md §Fault-aware planning);
+        # the bare "nitsum" is the no-resilience ablation the cascade
+        # matrix compares against
+        "nitsum-resilient": lambda: NitsumPolicy(
+            perf, tiers, candidate_tps=tps,
+            **{"resilience_weight": DEFAULT_RESILIENCE_WEIGHT, **policy_kw},
+        ),
         "sglang": lambda: StaticPolicy(perf, tiers, tp=tp0, candidate_tps=tps),
         "sglang-pd": lambda: StaticPolicy(
             perf, tiers, tp=tp0, disaggregated=True, candidate_tps=tps
@@ -2492,6 +2966,7 @@ def run_system(
     kv_watermark: float = 0.9,
     kv_audit: bool = False,
     admission=None,
+    kv_checkpoint: bool = False,
     **policy_kw,
 ):
     policy = make_policy(
@@ -2500,6 +2975,7 @@ def run_system(
     sim = Simulator(
         perf, tiers, n_chips, policy, engine=engine,
         kv_watermark=kv_watermark, kv_audit=kv_audit, admission=admission,
+        kv_checkpoint=kv_checkpoint,
     )
     meter = sim.run(workload)
     return sim, meter

@@ -106,6 +106,20 @@ def _case_library() -> Dict[str, Callable[[], dict]]:
                     seed=0, horizon_s=180.0
                 ),
             )
+    # correlated cascades (docs/faults.md §Failure domains): pure additions
+    # — domain-resolved kills, partial degradation and checkpointed
+    # restores are all new code paths, so existing goldens stay
+    # byte-identical. "nitsum-resilient" + kv_checkpoint is exactly the
+    # cascade-matrix "nitsum" system.
+    for name in ("cascade_host", "cascade_rack"):
+        add(
+            f"{name}/nitsum", fast=(name == "cascade_host"),
+            system="nitsum-resilient", tiers_kw=_SHORT_TIERS, kv_audit=True,
+            kv_checkpoint=True,
+            mk_workload=lambda name=name: get_scenario(name).build(
+                seed=0, horizon_s=180.0
+            ),
+        )
     # multi-tenant cases (docs/tenancy.md): gated WITH token-budget
     # admission (throttle/retry path) and open (tenant identity threads
     # through routing/metrics but nothing throttles). Existing cases stay
@@ -153,6 +167,12 @@ def summarize(res: SimResult) -> dict:
         "fault_restart_total": res.fault_restart_total,
         "fault_count": len(res.fault_timeline),
     }
+    # checkpointed-restore block only when restores actually fired
+    # (kv_checkpoint cases): every pre-existing golden stays byte-identical
+    if res.ckpt_restores:
+        out["ckpt_restores"] = res.ckpt_restores
+        out["ckpt_restored_tokens"] = round(res.ckpt_restored_tokens, 1)
+        out["ckpt_saved_prefill_s"] = round(res.ckpt_saved_prefill_s, 3)
     # tenant block only for genuinely multi-tenant (or throttled) replays:
     # single-default-tenant cases keep their committed goldens byte-identical
     named = {t for t in res.tenant_goodput if t != "default"}
@@ -176,6 +196,7 @@ def run_case(name: str) -> dict:
     sim, _ = run_system(
         spec["system"], perf, tiers, spec.get("n_chips", N_CHIPS), wl,
         kv_audit=spec.get("kv_audit", False),
+        kv_checkpoint=spec.get("kv_checkpoint", False),
         admission=mk_adm() if mk_adm is not None else None,
     )
     return summarize(sim.result(wl.horizon_s))
@@ -225,6 +246,11 @@ def check_case(
         bad.append(
             f"{name}: fault_count {got['fault_count']} != {g['fault_count']}"
         )
+    # checkpointed restores (cascade cases): zero-vs-nonzero and within 2x
+    ec = g.get("ckpt_restores", 0)
+    gc = got.get("ckpt_restores", 0)
+    if (gc == 0) != (ec == 0) or (ec and not 0.5 <= gc / ec <= 2.0):
+        bad.append(f"{name}: ckpt_restores {gc} vs golden {ec}")
     # tenant gates (only present on multi-tenant cases): per-tenant goodput
     # within 2·rtol, throttle counts agree on zero-vs-nonzero and within 2x
     for ten, v in g.get("tenant_goodput", {}).items():

@@ -45,8 +45,10 @@ import numpy as np
 from repro.traces.servegen import STATS as SERVEGEN_STATS
 from repro.traces.workload import (
     DEFAULT_TENANT,
+    FAULT_DOMAINS,
     FAULT_KINDS,
     FaultEvent,
+    Topology,
     Workload,
     make_workload,
     merge_workloads,
@@ -146,11 +148,28 @@ class FaultSpec:
     chips: int = 0  # chips lost (chip/host loss) or rejoining (recovery)
     duration_frac: float = 0.0  # straggler window, fraction of horizon
     slowdown: float = 1.0  # straggler perf multiplier (>1 = slower)
+    # --- failure-domain correlation (docs/faults.md §Failure domains) ---
+    # domain: victim scope — "" keeps the legacy anonymous draw; "host" /
+    # "rack" / "power" resolve a whole topology unit in the simulator
+    domain: str = ""
+    # wave: which member host of the cascade's rack/power domain fails at
+    # this event (-1 = the seeded first); events sharing `corr` share one
+    # victim seed, so a cascade's waves all land in the same domain
+    wave: int = -1
+    corr: int = -1  # correlation id; -1 = independent (seed by index)
+    # seeded per-host lag: build() adds U(0, lag_jitter_frac·horizon) to
+    # the fire time, drawn from the build seed — cascades fan out with
+    # host-to-host lag that varies by seed but replays bit-identically
+    lag_jitter_frac: float = 0.0
 
     def __post_init__(self):
         if self.kind not in FAULT_KINDS:
             raise ValueError(
                 f"unknown fault kind {self.kind!r}; known: {FAULT_KINDS}"
+            )
+        if self.domain not in FAULT_DOMAINS:
+            raise ValueError(
+                f"unknown fault domain {self.domain!r}; known: {FAULT_DOMAINS}"
             )
 
 
@@ -163,6 +182,9 @@ class ScenarioSpec:
     streams: Tuple[StreamSpec, ...]
     description: str = ""
     faults: Tuple[FaultSpec, ...] = ()
+    # failure-domain tree the realized trace carries (None = simulator
+    # default); only domain-scoped faults read it
+    topology: Optional[Topology] = None
 
     # ---- expected statistics (what scenario_checks verifies against) ----
     @property
@@ -225,18 +247,34 @@ class ScenarioSpec:
         wl = merge_workloads(self.name, *parts)
         # faults ride along in horizon fractions; victim seeds derive from
         # (build seed, fault index) so replays are bit-deterministic and a
-        # different build seed picks different victims
-        wl.faults = tuple(
-            FaultEvent(
-                t_s=f.t_frac * horizon,
-                kind=f.kind,
-                chips=f.chips,
-                duration_s=f.duration_frac * horizon,
-                slowdown=f.slowdown,
-                seed=(seed + 1) * 7919 + 101 * j,
+        # different build seed picks different victims. Correlated cascade
+        # members (corr >= 0) share the victim seed of their correlation
+        # id, so every wave resolves to the same rack/power domain; their
+        # per-host lag jitter is drawn per-event from the build seed.
+        events = []
+        for j, f in enumerate(self.faults):
+            vic = (seed + 1) * 7919 + 101 * (f.corr if f.corr >= 0 else j)
+            t_s = f.t_frac * horizon
+            if f.lag_jitter_frac > 0.0:
+                t_s += float(
+                    np.random.RandomState(vic + 17 * (j + 1)).uniform(
+                        0.0, f.lag_jitter_frac * horizon
+                    )
+                )
+            events.append(
+                FaultEvent(
+                    t_s=t_s,
+                    kind=f.kind,
+                    chips=f.chips,
+                    duration_s=f.duration_frac * horizon,
+                    slowdown=f.slowdown,
+                    seed=vic,
+                    domain=f.domain,
+                    wave=f.wave,
+                )
             )
-            for j, f in enumerate(self.faults)
-        )
+        wl.faults = tuple(sorted(events, key=lambda ev: ev.t_s))
+        wl.topology = self.topology
         return wl
 
     def scaled(self, rps_scale: float) -> "ScenarioSpec":
@@ -557,28 +595,153 @@ def _fault_straggler() -> ScenarioSpec:
     )
 
 
+def cascade_faults(
+    family: str,
+    t_frac: float = 0.30,
+    recover_t_frac: float = 0.62,
+    waves: int = 3,
+    wave_lag_frac: float = 0.02,
+    lag_jitter_frac: float = 0.012,
+    slowdown: float = 3.0,
+    degrade_frac: float = 0.22,
+    corr: int = 0,
+    topology: Optional[Topology] = None,
+) -> Tuple[FaultSpec, ...]:
+    """Generate one correlated failure cascade as a FaultSpec sequence.
+
+    This replaces the hand-coded composed incidents: a cascade is a
+    family name plus timing knobs, and the member events come out
+    correlated — they share the correlation id ``corr``, so ``build``
+    gives them one victim seed and the simulator resolves every wave to
+    the SAME host/rack/power domain, with per-host lag jitter drawn from
+    the build seed (``lag_jitter_frac``).
+
+    Families:
+      * ``host``   — a whole host drops (its chips fail together), a
+                     surviving chip of the blast neighborhood straggles,
+                     then the host rejoins (reload storm);
+      * ``rack``   — ``waves`` hosts of one rack drop one by one with
+                     seeded lag, then the rack rejoins at once;
+      * ``power``  — a power-feed event: ``waves+1`` hosts across the
+                     feed's racks drop in quick succession, rejoin at once;
+      * ``flaky``  — partial degradation only: a single-chip straggler
+                     plus an intermittent flaky link, no kills;
+      * ``legacy_host`` — the anonymous (domain-free) composed incident
+                     the old hand-coded ``incident_replay`` declared:
+                     host loss, a correlated single-chip follower, one
+                     combined recovery. Kept so the recorded golden
+                     trace is byte-identical while the literal is gone.
+    """
+    topo = topology or Topology()
+    cph = topo.chips_per_host
+    if family == "legacy_host":
+        # round the derived fraction so the generated spec reproduces the
+        # old hand-written literal bit-for-bit (0.30 + 0.04 != 0.34 in fp)
+        return (
+            FaultSpec("host_loss", t_frac, chips=cph),
+            FaultSpec("chip_loss", round(t_frac + 0.04, 10), chips=1),
+            FaultSpec("recovery", recover_t_frac, chips=cph + 1),
+        )
+    dur = max(recover_t_frac - t_frac - wave_lag_frac, 0.05)
+    if family == "host":
+        return (
+            FaultSpec("host_loss", t_frac, chips=cph, domain="host",
+                      corr=corr),
+            FaultSpec("chip_straggler", t_frac + wave_lag_frac,
+                      duration_frac=min(degrade_frac, dur),
+                      slowdown=slowdown, corr=corr + 1,
+                      lag_jitter_frac=lag_jitter_frac),
+            FaultSpec("recovery", recover_t_frac, chips=cph, domain="host",
+                      corr=corr),
+        )
+    if family in ("rack", "power"):
+        dom = family
+        n = waves if family == "rack" else waves + 1
+        events = [
+            FaultSpec("host_loss", t_frac + k * wave_lag_frac, chips=cph,
+                      domain=dom, wave=k, corr=corr,
+                      lag_jitter_frac=(lag_jitter_frac if k else 0.0))
+            for k in range(n)
+        ]
+        events.append(
+            FaultSpec("recovery", recover_t_frac, chips=n * cph, domain=dom,
+                      corr=corr)
+        )
+        return tuple(events)
+    if family == "flaky":
+        return (
+            FaultSpec("chip_straggler", t_frac, duration_frac=degrade_frac,
+                      slowdown=slowdown, corr=corr),
+            FaultSpec("link_flap", t_frac + wave_lag_frac,
+                      duration_frac=degrade_frac, slowdown=slowdown,
+                      corr=corr + 1, lag_jitter_frac=lag_jitter_frac),
+        )
+    raise ValueError(
+        f"unknown cascade family {family!r}; known: host, rack, power, "
+        "flaky, legacy_host"
+    )
+
+
 def _incident_replay() -> ScenarioSpec:
     return ScenarioSpec(
         name="incident_replay",
         horizon_s=_FAULT_HORIZON,
         description=(
-            "Composed incident: a host (8 chips) drops at 30%, a second "
-            "correlated single-chip failure lands at 34% while the pool "
-            "is already degraded, and all 9 chips rejoin at once at 60% — "
-            "a recovery storm of simultaneous weight reloads."
+            "Composed incident (generated: cascade_faults('legacy_host')): "
+            "a host (8 chips) drops at 30%, a second correlated "
+            "single-chip failure lands at 34% while the pool is already "
+            "degraded, and all 9 chips rejoin at once at 60% — a recovery "
+            "storm of simultaneous weight reloads."
         ),
         streams=_fault_base_streams(),
-        faults=(
-            FaultSpec("host_loss", 0.30, chips=8),
-            FaultSpec("chip_loss", 0.34, chips=1),
-            FaultSpec("recovery", 0.60, chips=9),
+        faults=cascade_faults("legacy_host", t_frac=0.30,
+                              recover_t_frac=0.60),
+    )
+
+
+def _cascade(family: str) -> ScenarioSpec:
+    desc = {
+        "host": (
+            "Domain-correlated host cascade: one host's chips fail "
+            "together at 30%, a neighboring chip straggles 3x through the "
+            "incident, and the host rejoins at 62% (reload storm)."
         ),
+        "rack": (
+            "Rack cascade: three hosts of ONE rack drop one by one with "
+            "seeded per-host lag from 30%, and the rack rejoins at once "
+            "at 62% — the fan-out the hand-coded incident_replay only "
+            "gestured at."
+        ),
+        "power": (
+            "Power-feed cascade: four hosts across the feed's racks drop "
+            "in quick succession from 30% and rejoin at once at 62% — the "
+            "widest blast radius in the matrix."
+        ),
+        "flaky": (
+            "Partial degradation, no kills: a single chip inside a TP "
+            "group straggles 3x (the group runs at its slowest chip) and "
+            "an ICI link flaps intermittently — the shrink-TP-in-place "
+            "case."
+        ),
+    }[family]
+    return ScenarioSpec(
+        name=f"cascade_{family}",
+        horizon_s=_FAULT_HORIZON,
+        description=desc,
+        streams=_fault_base_streams(),
+        faults=cascade_faults(family),
+        topology=Topology(),
     )
 
 
 FAULT_SCENARIOS = (
     "fault_chip_loss", "fault_host_loss", "fault_kv_loss", "fault_straggler",
     "incident_replay",
+)
+
+# the cascade-matrix rows (benchmarks/cascade_matrix.py)
+CASCADE_SCENARIOS = (
+    "cascade_host", "cascade_rack", "cascade_power", "cascade_flaky",
 )
 
 _REGISTRY = {
@@ -588,6 +751,8 @@ _REGISTRY = {
         _prefill_heavy(), _decode_heavy(), noisy_neighbor_spec(),
         _fault_chip_loss(), _fault_host_loss(), _fault_kv_loss(),
         _fault_straggler(), _incident_replay(),
+        _cascade("host"), _cascade("rack"), _cascade("power"),
+        _cascade("flaky"),
     )
 }
 

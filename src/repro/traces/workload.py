@@ -13,7 +13,77 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-FAULT_KINDS = ("chip_loss", "host_loss", "kv_loss", "straggler", "recovery")
+FAULT_KINDS = (
+    "chip_loss", "host_loss", "kv_loss", "straggler", "recovery",
+    # partial degradation (docs/faults.md §Partial degradation): a single
+    # chip inside a TP group straggles (the group runs at its slowest
+    # chip), or one ICI link flaps — seeded intermittent slowdown
+    "chip_straggler", "link_flap",
+)
+
+# Victim scopes for domain-correlated faults (docs/faults.md §Failure
+# domains). "" = legacy anonymous-chip selection (seeded permutation over
+# groups); the rest select a whole topology domain, so one cascade's
+# events share a victim and fan out deterministically.
+FAULT_DOMAINS = ("", "host", "rack", "power")
+
+
+@dataclass(frozen=True)
+class Topology:
+    """Seeded failure-domain tree over an anonymous chip count.
+
+    Chips are integers ``0..n_chips-1``; the tree is positional —
+    chip → host (``chips_per_host``), host → rack (``hosts_per_rack``),
+    rack → power domain (``racks_per_domain``) — so the same Topology
+    describes any pool size and two replays of one (trace, seed) agree
+    on every domain membership. Defaults model a v5e-ish pod slice: 8
+    chips per host, 4 hosts per rack, 2 racks per power feed.
+    """
+
+    chips_per_host: int = 8
+    hosts_per_rack: int = 4
+    racks_per_domain: int = 2
+
+    def host_of(self, chip: int) -> int:
+        return chip // self.chips_per_host
+
+    def rack_of(self, chip: int) -> int:
+        return self.host_of(chip) // self.hosts_per_rack
+
+    def domain_of(self, chip: int) -> int:
+        return self.rack_of(chip) // self.racks_per_domain
+
+    def n_hosts(self, n_chips: int) -> int:
+        return -(-n_chips // self.chips_per_host)
+
+    def n_racks(self, n_chips: int) -> int:
+        return -(-self.n_hosts(n_chips) // self.hosts_per_rack)
+
+    def n_domains(self, n_chips: int) -> int:
+        return -(-self.n_racks(n_chips) // self.racks_per_domain)
+
+    def host_chips(self, host: int, n_chips: int) -> Tuple[int, ...]:
+        lo = host * self.chips_per_host
+        return tuple(range(lo, min(lo + self.chips_per_host, n_chips)))
+
+    def rack_hosts(self, rack: int, n_chips: int) -> Tuple[int, ...]:
+        lo = rack * self.hosts_per_rack
+        return tuple(range(lo, min(lo + self.hosts_per_rack, self.n_hosts(n_chips))))
+
+    def domain_hosts(self, domain: int, n_chips: int) -> Tuple[int, ...]:
+        racks = range(
+            domain * self.racks_per_domain,
+            min((domain + 1) * self.racks_per_domain, self.n_racks(n_chips)),
+        )
+        out: List[int] = []
+        for r in racks:
+            out.extend(self.rack_hosts(r, n_chips))
+        return tuple(out)
+
+    def hosts_spanned(self, tp: int) -> int:
+        """Host-failure modes a host-aligned TP group of size ``tp`` is
+        exposed to (the planner's recovery-cost term reads this)."""
+        return -(-tp // self.chips_per_host)
 
 # Tenant identity (docs/tenancy.md): every request belongs to a tenant.
 # Tenant-free workloads carry this sentinel, and every tenant-aware layer
@@ -51,6 +121,17 @@ class FaultEvent:
                          ``duration_s`` seconds, then recovers.
       * ``recovery``   — ``chips`` chips rejoin the pool; newly formed
                          groups pay a full weight-reload storm.
+      * ``chip_straggler`` — ONE chip of a group runs ``slowdown``x
+                         slower; its group runs at its slowest chip.
+      * ``link_flap``  — one chip's ICI link flaps: seeded intermittent
+                         ``slowdown`` windows inside ``duration_s``.
+
+    Domain correlation (docs/faults.md §Failure domains): ``domain``
+    scopes the victim to a topology unit instead of the legacy anonymous
+    draw — events of one cascade share a ``seed`` so they resolve to the
+    SAME host/rack/power domain, and ``wave`` indexes the member host
+    that fails at this event (rack/power cascades fan out host by host
+    with seeded per-host lag realized at build time).
     """
 
     t_s: float
@@ -59,6 +140,8 @@ class FaultEvent:
     duration_s: float = 0.0
     slowdown: float = 1.0
     seed: int = 0
+    domain: str = ""  # "" | "host" | "rack" | "power"
+    wave: int = -1  # member-host index within the cascade (-1 = first)
 
 
 @dataclass
@@ -67,6 +150,10 @@ class Workload:
     requests: List[TraceRequest]
     horizon_s: float
     faults: Tuple[FaultEvent, ...] = ()
+    # failure-domain tree for domain-scoped faults; None = the default
+    # Topology (the simulator binds one either way, so chip identity and
+    # domain membership are always defined)
+    topology: Optional[Topology] = None
 
     @property
     def rps(self) -> float:
@@ -93,11 +180,12 @@ class Workload:
         ]
         faults = tuple(
             FaultEvent(ev.t_s * f, ev.kind, ev.chips, ev.duration_s * f,
-                       ev.slowdown, ev.seed)
+                       ev.slowdown, ev.seed, ev.domain, ev.wave)
             for ev in self.faults
         )
         return Workload(
-            f"{self.name}@{target_rps:.1f}rps", reqs, self.horizon_s * f, faults
+            f"{self.name}@{target_rps:.1f}rps", reqs, self.horizon_s * f,
+            faults, self.topology,
         )
 
 
@@ -218,4 +306,5 @@ def merge_workloads(name: str, *wls: Workload) -> Workload:
     faults = tuple(
         sorted((ev for w in wls for ev in w.faults), key=lambda ev: ev.t_s)
     )
-    return Workload(name, reqs, max(w.horizon_s for w in wls), faults)
+    topo = next((w.topology for w in wls if w.topology is not None), None)
+    return Workload(name, reqs, max(w.horizon_s for w in wls), faults, topo)
